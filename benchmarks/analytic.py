@@ -1,0 +1,120 @@
+"""Analytic per-device FLOPs / HBM-bytes for each dry-run cell.
+
+Why analytic: XLA's ``compiled.cost_analysis()`` counts a while-loop body
+ONCE, so any scanned-layer model under-reports FLOPs/bytes by ~n_layers×
+(and ×microbatches for grad accumulation). The roofline therefore derives
+its terms from exact op dimensions below — the same dimensional accounting
+the calibrated simulator uses — and records the raw HLO numbers alongside as
+a per-iteration cross-check (see EXPERIMENTS.md §Roofline methodology).
+
+All counts are PER DEVICE on the production mesh (TP=model axis splits
+matmul dims; DP=data[×pod] splits tokens; FSDP splits parameter storage).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES, ShapeSpec
+
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops: float  # per device
+    hbm_bytes: float  # per device
+    notes: str = ""
+
+
+def _attn_flops(cfg: ModelConfig, tokens: int, ctx_avg: float) -> float:
+    """Attention score+value matmul flops for `tokens` queries vs ctx_avg keys."""
+    n_attn = cfg.n_attn_layers
+    if n_attn == 0:
+        return 0.0
+    if cfg.mla:
+        d_qk = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        d_v = cfg.kv_lora_rank
+    else:
+        d_qk = d_v = cfg.head_dim
+    return 2.0 * tokens * ctx_avg * cfg.n_heads * (d_qk + d_v) * n_attn
+
+
+def _ssm_flops(cfg: ModelConfig, tokens: int) -> float:
+    n_ssm = sum(1 for s in cfg.layer_specs if s.mixer in ("mamba1", "mamba2"))
+    if n_ssm == 0:
+        return 0.0
+    d_in = cfg.m_expand * cfg.d_model
+    ds = max(cfg.m_d_state, cfg.m_d_state_m1)
+    # state update + readout ~ 6 * d_in * d_state per token per layer
+    return 6.0 * tokens * d_in * ds * n_ssm
+
+
+def _linear_flops(cfg: ModelConfig, tokens: int) -> float:
+    return 2.0 * cfg.active_param_count() * tokens
+
+
+def cell_cost(cfg: ModelConfig, shape: ShapeSpec, n_devices: int,
+              microbatches: int = 1, remat: bool = True) -> CellCost:
+    B, S = shape.global_batch, shape.seq_len
+    dp = n_devices // 16  # model axis is 16 in both meshes
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+
+    if shape.kind == "train":
+        tokens = B * S
+        fwd = _linear_flops(cfg, tokens) + _attn_flops(cfg, tokens, S / 2) \
+            + _ssm_flops(cfg, tokens)
+        # bwd = 2x fwd; full remat recomputes fwd once more
+        total = fwd * (4.0 if remat else 3.0)
+        flops_dev = total / n_devices
+
+        tokens_loc = tokens / dp
+        # params: FSDP all-gather writes+reads per microbatch (fwd + bwd), in bf16
+        p_tp = n_active * BF16 / 16.0  # after TP split, what one device must see
+        param_traffic = 2.0 * 2.0 * p_tp * microbatches
+        # optimizer: read p,m,v + write p,m,v in fp32, FSDP-sharded
+        opt_traffic = 6.0 * n_total * F32 / n_devices
+        grad_traffic = 2.0 * n_total * F32 / n_devices * microbatches
+        # activations: ~12 residual-stream r/w per layer (SP-sharded over model)
+        act_traffic = 12.0 * cfg.n_layers * tokens_loc * cfg.d_model * BF16 / 16.0
+        logits = 2.0 * tokens_loc * cfg.vocab_size * F32 / 16.0
+        bytes_dev = param_traffic + opt_traffic + grad_traffic + act_traffic + logits
+        return CellCost(flops_dev, bytes_dev, "train: 4x fwd (remat), FSDP+opt traffic")
+
+    if shape.kind == "prefill":
+        tokens = B * S
+        fwd = _linear_flops(cfg, tokens) + _attn_flops(cfg, tokens, S / 2) \
+            + _ssm_flops(cfg, tokens)
+        flops_dev = fwd / n_devices
+        tokens_loc = tokens / dp
+        param_traffic = n_active * BF16 / 16.0  # weights stream once (layer reuse)
+        kv_write = cfg.kv_bytes_per_token_layer * cfg.n_attn_layers * tokens_loc / 16.0 \
+            if cfg.n_attn_layers else 0.0
+        act_traffic = 8.0 * cfg.n_layers * tokens_loc * cfg.d_model * BF16 / 16.0
+        bytes_dev = param_traffic + kv_write + act_traffic
+        return CellCost(flops_dev, bytes_dev, "prefill: weights once + KV write")
+
+    # decode: one token per request against a cache of S
+    tokens = B
+    fwd = _linear_flops(cfg, tokens) + _attn_flops(cfg, tokens, S) + _ssm_flops(cfg, tokens)
+    flops_dev = fwd / n_devices
+    b_loc = max(B / dp, 1.0 / dp if B == 1 else 1.0)  # B=1: SP shards the KV instead
+    param_traffic = n_active * BF16 / 16.0  # every weight read for 1 token (the paper's point)
+    if cfg.n_attn_layers:
+        kv_read = cfg.kv_bytes_per_token_layer * cfg.n_attn_layers * S * B / n_devices \
+            if B == 1 else cfg.kv_bytes_per_token_layer * cfg.n_attn_layers * S * b_loc / 16.0
+    else:
+        kv_read = 0.0
+    bytes_dev = param_traffic + kv_read
+    return CellCost(flops_dev, bytes_dev, "decode: weights + full KV read")
+
+
+def collective_multiplier(cfg: ModelConfig, shape: ShapeSpec, microbatches: int) -> float:
+    """Trip-count multiplier for collectives parsed inside while bodies
+    (per-layer collectives execute n_periods times per [micro]batch pass)."""
+    trips = max(cfg.n_periods, 1)
+    if shape.kind == "train":
+        trips *= 2 * max(microbatches, 1)  # fwd + bwd bodies per microbatch
+    return float(trips)

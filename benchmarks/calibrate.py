@@ -1,0 +1,125 @@
+"""Calibrate the simulator's free constants against the paper's Fig 5/6 anchors.
+
+The paper's Timeloop-backed cost model has internals we cannot observe
+(mapping efficiencies, buffer timing). The mechanism (packing + residual-BW
+prefetch + capacity-bounded buffer) is implemented exactly; three scalar
+constants remain free and are fitted here by grid search:
+
+    mxu_efficiency      achieved/peak for LLM matmuls
+    bw_efficiency       achieved/peak HBM streaming
+    prefetch_read_mult  M3D buffer read bw as a multiple of HBM bw
+
+Anchors (Llama3.1-8B on TPUv6e-like, from §V case studies 1-2):
+    A1 decode speedup, packing-only,     (P=2048, KV=128K) = 1.41
+    A2 decode speedup, packing-prefetch, (P=2048, KV=128K) = 8.06
+    A3 overall speedup, packing-prefetch,(P=512,  KV=16K)  = 1.83
+    A4 overall speedup, packing-prefetch,(P=1024, KV=16K)  = 1.72
+    A5 overall speedup, packing-only,    (P=1024, KV=16K)  = 1.20
+    A6 decode speedup @64K, 0MB buffer (packing-only)      = 1.73
+    A7 decode speedup @64K, 512MB buffer                   = 6.49
+    A8 overall  @64K, 512MB, P=2048                        = 1.35
+    A9 overall  @64K, 512MB, P=1024                        = 1.68
+Absolute-time anchors (case 3 SLO thresholds — pin the time scale):
+    A10 packed-prefetch stage @ (chunk 512 + 32x4K decode), 8B/TPUv6e = 16.70 ms
+    A11 same condition, 70B/TPUv7-like                                = 19.23 ms
+
+Run: PYTHONPATH=src python -m benchmarks.calibrate
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import math
+import os
+
+from repro.configs import get_config
+from repro.sim import hardware
+from repro.sim.stage import decode_latency, simulate_stage
+
+MB = 1024**2
+K = 1024
+
+
+def anchors_error(hw, cfg, hw70=None, cfg70=None, verbose=False):
+    def sp(P, ctxs, mode, buf=None, what="decode"):
+        serial = simulate_stage(hw, cfg, P, ctxs, "serial")
+        if what == "decode":
+            d = decode_latency(hw, cfg, P, ctxs, mode, prefetch_buffer=buf)
+            return serial.decode_time / d
+        r = simulate_stage(hw, cfg, P, ctxs, mode, prefetch_buffer=buf)
+        return serial.stage_time / r.stage_time
+
+    ctx128 = [4 * K] * 32
+    ctx64 = [4 * K] * 16
+    ctx16 = [4 * K] * 4
+    preds = {
+        "A1": (sp(2048, ctx128, "packed"), 1.41),
+        "A2": (sp(2048, ctx128, "packed_prefetch"), 8.06),
+        "A3": (sp(512, ctx16, "packed_prefetch", what="overall"), 1.83),
+        "A4": (sp(1024, ctx16, "packed_prefetch", what="overall"), 1.72),
+        "A5": (sp(1024, ctx16, "packed", what="overall"), 1.20),
+        "A6": (sp(2048, ctx64, "packed_prefetch", buf=0.0), 1.73),
+        "A7": (sp(2048, ctx64, "packed_prefetch", buf=512 * MB), 6.49),
+        "A8": (sp(2048, ctx64, "packed_prefetch", buf=512 * MB, what="overall"), 1.35),
+        "A9": (sp(1024, ctx64, "packed_prefetch", buf=512 * MB, what="overall"), 1.68),
+    }
+    preds["A10"] = (
+        simulate_stage(hw, cfg, 512, [4 * K] * 32, "packed_prefetch").stage_time * 1e3,
+        16.70,
+    )
+    if hw70 is not None:
+        preds["A11"] = (
+            simulate_stage(hw70, cfg70, 512, [4 * K] * 32, "packed_prefetch").stage_time * 1e3,
+            19.23,
+        )
+    err = 0.0
+    for name, (got, want) in preds.items():
+        err += (math.log(got) - math.log(want)) ** 2
+        if verbose:
+            print(f"  {name}: sim={got:6.2f} paper={want:5.2f}  ({100*(got/want-1):+5.1f}%)")
+    return math.sqrt(err / len(preds)), preds
+
+
+def main():
+    cfg = get_config("llama3.1-8b")
+    cfg70 = get_config("llama3.1-70b")
+    best = None
+    for mxu, bw, mult in itertools.product(
+        (0.40, 0.50, 0.60, 0.70, 0.80, 0.90, 1.0),
+        (0.70, 0.80, 0.90, 1.0),
+        (2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 32.0),
+    ):
+        hw = dataclasses.replace(
+            hardware.TPUV6E, mxu_efficiency=mxu, bw_efficiency=bw, prefetch_read_mult=mult
+        )
+        hw70 = dataclasses.replace(
+            hardware.TPUV7, mxu_efficiency=mxu, bw_efficiency=bw, prefetch_read_mult=mult
+        )
+        err, _ = anchors_error(hw, cfg, hw70, cfg70)
+        if best is None or err < best[0]:
+            best = (err, mxu, bw, mult)
+    err, mxu, bw, mult = best
+    print(f"best: mxu_eff={mxu} bw_eff={bw} prefetch_read_mult={mult} rms_log_err={err:.3f}")
+    hw = dataclasses.replace(
+        hardware.TPUV6E, mxu_efficiency=mxu, bw_efficiency=bw, prefetch_read_mult=mult
+    )
+    hw70 = dataclasses.replace(
+        hardware.TPUV7, mxu_efficiency=mxu, bw_efficiency=bw, prefetch_read_mult=mult
+    )
+    _, preds = anchors_error(hw, cfg, hw70, cfg70, verbose=True)
+    out = {
+        "mxu_efficiency": mxu,
+        "bw_efficiency": bw,
+        "prefetch_read_mult": mult,
+        "rms_log_err": err,
+        "anchors": {k: {"sim": float(v[0]), "paper": v[1]} for k, v in preds.items()},
+    }
+    path = os.path.join(os.path.dirname(__file__), "calibration.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Fig 5: stage-level decode + overall speedups vs serial execution.
+
+Grid: prefill tokens {512, 1024, 2048} x decode KV {16K, 32K, 64K, 128K},
+Llama3.1-8B on TPUv6e-like, modes {packing, packing-prefetch}. Paper anchors:
+decode 8.06x / packed 1.41x @ (2048, 128K); overall 1.83x @ (512, 16K);
+1.72x vs 1.20x @ 1024.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.sim.hardware import TPUV6E
+from repro.sim.stage import decode_latency, simulate_stage
+
+K = 1024
+PAPER = {  # (P, KV, mode, metric) -> paper value, where reported in §V
+    (2048, 128 * K, "packed", "decode"): 1.41,
+    (2048, 128 * K, "packed_prefetch", "decode"): 8.06,
+    (512, 16 * K, "packed_prefetch", "overall"): 1.83,
+    (1024, 16 * K, "packed_prefetch", "overall"): 1.72,
+    (1024, 16 * K, "packed", "overall"): 1.20,
+}
+
+
+def run(print_fn=print):
+    cfg = get_config("llama3.1-8b")
+    hw = TPUV6E
+    print_fn(
+        "fig5,prefill,kv_tokens,mode,decode_speedup,overall_speedup,"
+        "paper_decode,delta_dec_pct,paper_overall,delta_ov_pct"
+    )
+    for P in (512, 1024, 2048):
+        for KV in (16 * K, 32 * K, 64 * K, 128 * K):
+            ctxs = [4 * K] * (KV // (4 * K))
+            serial = simulate_stage(hw, cfg, P, ctxs, "serial")
+            for mode in ("packed", "packed_prefetch"):
+                r = simulate_stage(hw, cfg, P, ctxs, mode)
+                dec = serial.decode_time / decode_latency(hw, cfg, P, ctxs, mode)
+                ov = serial.stage_time / r.stage_time
+                pd = PAPER.get((P, KV, mode, "decode"))
+                po = PAPER.get((P, KV, mode, "overall"))
+                dd = f"{100*(dec/pd-1):+.1f}" if pd else ""
+                dov = f"{100*(ov/po-1):+.1f}" if po else ""
+                print_fn(
+                    f"fig5,{P},{KV//K}K,{mode},{dec:.2f},{ov:.2f},"
+                    f"{pd or ''},{dd},{po or ''},{dov}"
+                )
+    return True
+
+
+if __name__ == "__main__":
+    run()

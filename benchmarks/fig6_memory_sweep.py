@@ -1,0 +1,35 @@
+"""Paper Fig 6: prefetch-buffer capacity sweep at 64K decode KV.
+
+Decode + overall speedups vs serial for buffer {0..512MB} x prefill {512,
+1024, 2048}. Paper anchors: decode 1.73x (0MB) -> 6.49x (512MB); overall
+1.35x @2048 / 1.68x @1024 at 512MB.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.sim.hardware import TPUV6E
+from repro.sim.stage import decode_latency, simulate_stage
+
+K = 1024
+MB = 1024**2
+
+
+def run(print_fn=print):
+    cfg = get_config("llama3.1-8b")
+    hw = TPUV6E
+    ctxs = [4 * K] * 16  # 64K decode KV
+    print_fn("fig6,prefill,buffer_mb,decode_speedup,overall_speedup")
+    for P in (512, 1024, 2048):
+        serial = simulate_stage(hw, cfg, P, ctxs, "serial")
+        for buf in (0, 64 * MB, 128 * MB, 256 * MB, 384 * MB, 512 * MB):
+            r = simulate_stage(hw, cfg, P, ctxs, "packed_prefetch", prefetch_buffer=buf)
+            dec = serial.decode_time / decode_latency(
+                hw, cfg, P, ctxs, "packed_prefetch", prefetch_buffer=buf
+            )
+            ov = serial.stage_time / r.stage_time
+            print_fn(f"fig6,{P},{buf//MB},{dec:.2f},{ov:.2f}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

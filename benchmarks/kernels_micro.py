@@ -1,0 +1,85 @@
+"""Kernel microbenchmarks (CPU: XLA reference path timing + interpret-mode
+correctness cross-check; the Pallas kernels are TPU-target)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.models.flash_xla import flash_sdpa
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(print_fn=print):
+    print_fn("kernel,us_per_call,derived")
+    rng = jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 4)
+
+    B, S, H, KV, d = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, d), jnp.float32)
+
+    f_ref = jax.jit(lambda q, k, v: ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)))
+    us = _time(f_ref, q, k, v)
+    flops = 4 * B * H * S * S * d / 2
+    print_fn(f"attention_xla_ref_1k,{us:.0f},{flops/us*1e-3:.1f}GFLOP/s_cpu")
+
+    qp = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    f_flash = jax.jit(lambda q, k, v: flash_sdpa(q, (k, v), qp, jnp.arange(S),
+                                                 scale=d**-0.5, block_q=256, block_k=256))
+    us = _time(f_flash, q, k, v)
+    print_fn(f"flash_xla_blocked_1k,{us:.0f},{flops/us*1e-3:.1f}GFLOP/s_cpu")
+
+    # decode attention: 32 requests x 8K KV
+    Bd, Sd = 32, 8192
+    qd = jax.random.normal(ks[0], (Bd, 1, H, d), jnp.float32)
+    kd = jax.random.normal(ks[1], (Bd, Sd, KV, d), jnp.float32)
+    vd = jax.random.normal(ks[2], (Bd, Sd, KV, d), jnp.float32)
+    lens = jnp.full((Bd,), Sd, jnp.int32)
+    f_dec = jax.jit(lambda q, k, v, l: ref.decode_attention_ref(
+        q[:, 0].reshape(Bd, KV, H // KV, d), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), l))
+    us = _time(f_dec, qd, kd, vd, lens)
+    kv_gb = Bd * Sd * KV * d * 2 * 4 / 1e9
+    print_fn(f"decode_attention_ref_32x8k,{us:.0f},{kv_gb/ (us*1e-6):.1f}GB/s_cpu")
+
+    # SSD chunk scan
+    Bs, Ss, nh, hd, G, ds = 2, 2048, 8, 32, 1, 32
+    x = jax.random.normal(ks[0], (Bs, Ss, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bs, Ss, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (Bs, Ss, G, ds), jnp.float32) * 0.5
+    Cm = jax.random.normal(ks[0], (Bs, Ss, G, ds), jnp.float32) * 0.5
+    from repro.models.mamba import ssd_chunked
+    f_ssd = jax.jit(lambda x, dt, Bm, Cm: ssd_chunked(x, dt, A, Bm, Cm))
+    us = _time(f_ssd, x, dt, Bm, Cm)
+    print_fn(f"ssd_chunked_xla_2k,{us:.0f},{Bs*Ss/(us*1e-6)/1e6:.2f}Mtok/s_cpu")
+
+    # interpret-mode cross-checks (Pallas kernel == oracle), small shapes
+    out = ops.flash_attention_bshd(q[:, :256], k[:, :256], v[:, :256],
+                                   interpret=True, block_q=128, block_k=128)
+    expect = ref.flash_attention_ref(
+        q[:, :256].transpose(0, 2, 1, 3), k[:, :256].transpose(0, 2, 1, 3),
+        v[:, :256].transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(out - expect)))
+    print_fn(f"pallas_flash_interpret_check,0,max_err={err:.2e}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

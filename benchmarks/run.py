@@ -1,0 +1,44 @@
+"""Benchmark driver — one section per paper table/figure + roofline.
+
+PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig5,roofline]
+Prints ``name,...`` CSV rows per section.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller service sims")
+    ap.add_argument("--only", default="", help="comma-separated section filter")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    from benchmarks import (fig5_stage_latency, fig6_memory_sweep,
+                            fig7_service_throughput, fig8_chunk_tradeoff,
+                            kernels_micro, roofline)
+
+    sections = [
+        ("fig5", lambda: fig5_stage_latency.run()),
+        ("fig6", lambda: fig6_memory_sweep.run()),
+        ("fig7", lambda: fig7_service_throughput.run(fast=args.fast)),
+        ("fig8", lambda: fig8_chunk_tradeoff.run(fast=args.fast)),
+        ("kernels", lambda: kernels_micro.run()),
+        ("roofline", lambda: roofline.run()),
+    ]
+    for name, fn in sections:
+        if only and name not in only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

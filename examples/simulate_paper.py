@@ -1,0 +1,47 @@
+"""Reproduce the paper's headline numbers with the calibrated framework.
+
+    PYTHONPATH=src python examples/simulate_paper.py
+"""
+from repro.configs import get_config
+from repro.serving.workload import OPENCHAT_SHAREGPT4
+from repro.sim.hardware import TPUV6E, TPUV7
+from repro.sim.service import qps_under_slo, slo_threshold
+from repro.sim.stage import decode_latency, simulate_stage
+
+K = 1024
+MB = 1024**2
+
+
+def main():
+    cfg = get_config("llama3.1-8b")
+    hw = TPUV6E
+    print("== Case study 1 (Fig 5): Llama3.1-8B, TPUv6e-like + 512MB M3D ==")
+    ctxs = [4 * K] * 32
+    serial = simulate_stage(hw, cfg, 2048, ctxs, "serial")
+    for mode, paper_dec in (("packed", 1.41), ("packed_prefetch", 8.06)):
+        dec = serial.decode_time / decode_latency(hw, cfg, 2048, ctxs, mode)
+        print(f"  {mode:16s} decode speedup {dec:5.2f}x (paper {paper_dec}x)")
+    s16 = simulate_stage(hw, cfg, 512, [4 * K] * 4, "serial")
+    p16 = simulate_stage(hw, cfg, 512, [4 * K] * 4, "packed_prefetch")
+    print(f"  overall @(512,16K)  {s16.stage_time/p16.stage_time:.2f}x (paper 1.83x)")
+
+    print("== Case study 2 (Fig 6): buffer sweep @64K ==")
+    ctxs = [4 * K] * 16
+    s = simulate_stage(hw, cfg, 2048, ctxs, "serial")
+    for buf, paper in ((0, 1.73), (512 * MB, 6.49)):
+        dec = s.decode_time / decode_latency(hw, cfg, 2048, ctxs, "packed_prefetch",
+                                             prefetch_buffer=buf)
+        print(f"  buffer {buf//MB:3d}MB decode speedup {dec:5.2f}x (paper {paper}x)")
+
+    print("== Case study 3 (Fig 7): service-level, openchat_sharegpt4, 8B ==")
+    slo = slo_threshold(hw, cfg)
+    q_pf, _ = qps_under_slo(hw, cfg, OPENCHAT_SHAREGPT4, "packed_prefetch", slo,
+                            n_requests=150, iters=9)
+    q_pk, _ = qps_under_slo(hw, cfg, OPENCHAT_SHAREGPT4, "packed", slo,
+                            n_requests=150, iters=9)
+    print(f"  SLO {slo*1e3:.1f}ms (paper 16.70ms): QPS {q_pf:.2f} vs {q_pk:.2f} "
+          f"-> {q_pf/max(q_pk,1e-9):.2f}x (paper 1.8x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.configs.base import LayerSpec, ModelConfig, get_config, list_archs  # noqa: F401
+from repro.configs.reduced import reduce_config  # noqa: F401

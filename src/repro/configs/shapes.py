@@ -1,0 +1,93 @@
+"""Assigned input-shape presets and ShapeDtypeStruct input specs for dry-runs.
+
+Every (arch × shape) cell lowers one of:
+  train_4k    -> train_step   tokens/labels (B, S)
+  prefill_32k -> prefill      tokens (B, S) + zero-initialized KV cache of S
+  decode_32k  -> decode_step  tokens (B, 1) + KV cache holding S tokens
+  long_500k   -> decode_step  (sub-quadratic archs only)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — no allocation.
+Frontend stubs: vlm archs get (B, frontend_len, d_model) patch embeddings
+(text length is reduced so total positions == seq_len); audio enc-dec archs
+get (B, frontend_len, d_model) frame embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic decode over 512K context)
+SUBQUADRATIC = {"mamba2-2.7b", "jamba-v0.1-52b"}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return False, "SKIP: full-attention arch at 512K context (DESIGN.md §4)"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16) -> dict:
+    """Batch-side ShapeDtypeStructs for the step function of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if shape.kind == "train":
+        if cfg.encdec:
+            return {
+                "frames": _sds((B, cfg.frontend_len, cfg.d_model), dtype),
+                "tokens": _sds((B, S), i32),
+            }
+        if cfg.frontend:  # vlm: patch embeds + text fill the S positions
+            s_text = S - cfg.frontend_len
+            return {
+                "frontend_embeds": _sds((B, cfg.frontend_len, cfg.d_model), dtype),
+                "tokens": _sds((B, s_text), i32),
+            }
+        return {"tokens": _sds((B, S), i32)}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((B, S), i32)}
+        if cfg.encdec:
+            batch = {
+                "frames": _sds((B, cfg.frontend_len, cfg.d_model), dtype),
+                "tokens": _sds((B, S), i32),
+            }
+        elif cfg.frontend:
+            batch = {
+                "frontend_embeds": _sds((B, cfg.frontend_len, cfg.d_model), dtype),
+                "tokens": _sds((B, S - cfg.frontend_len), i32),
+            }
+        return batch
+
+    # decode: one new token against a cache of S tokens
+    return {"tokens": _sds((B, 1), i32)}
+
+
+def cache_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """KV-cache capacity for serving cells."""
+    return shape.seq_len

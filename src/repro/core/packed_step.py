@@ -1,0 +1,172 @@
+"""Packed forward step: prefill-chunk tokens + decode tokens in ONE call.
+
+This is the paper's packing made real in JAX: the step takes a flat token
+set — one token per decoding request plus a chunk of a prefilling request —
+and runs every linear/FFN/MoE op over the packed (N, d) token matrix, so
+model weights stream from HBM once per step (the compute-bound conversion of
+decode linear ops, §III). Attention is per-token over the owning request's
+KV-cache row: all N tokens first scatter their K/V into (slot, position),
+then each attends under the mask k_pos <= position — which makes intra-chunk
+causality and cross-request isolation hold by construction.
+
+Works for attention-family architectures (incl. MLA). SSM/hybrid mixers need
+contiguous per-segment scans, so those archs use the engine's two-call mode
+(their decode is state-recurrent and not KV-bound — DESIGN.md §4).
+
+The gather `cache[slots]` is the CPU-scale correctness realization; on TPU
+the same schedule maps to kernels/decode_attention.py + flash_attention.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import moe
+from repro.models.attention import NEG_INF, softcap
+from repro.models.layers import apply_rope, dense, ffn, rms_norm
+from repro.models.model import Model
+
+
+def supports_packed(cfg: ModelConfig) -> bool:
+    return (not cfg.encdec) and all(s.mixer == "attn" for s in cfg.layer_specs)
+
+
+# ---------------------------------------------------------------------------
+# packed attention over gathered cache rows
+# ---------------------------------------------------------------------------
+
+
+def _packed_gqa(p, cfg: ModelConfig, spec: LayerSpec, x, slots, positions, cache, inv_freq):
+    N, _ = x.shape
+    hd = cfg.head_dim
+    q = dense(p["wq"], x).reshape(N, 1, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(N, 1, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(N, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    pos2 = positions[:, None]  # (N,1)
+    q = apply_rope(q, pos2, inv_freq)[:, 0]  # (N,H,hd)
+    k = apply_rope(k, pos2, inv_freq)[:, 0]
+    v = v[:, 0]
+
+    ck = cache["k"].at[slots, positions].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[slots, positions].set(v.astype(cache["v"].dtype))
+    new_cache = {"k": ck, "v": cv}
+
+    S = ck.shape[1]
+    KV = cfg.n_kv_heads
+    G = cfg.n_heads // KV
+    kc = ck[slots].astype(x.dtype)  # (N,S,KV,hd)
+    vc = cv[slots].astype(x.dtype)
+    qg = q.reshape(N, KV, G, hd)
+    s = jnp.einsum("nkgh,nskh->nkgs", qg, kc).astype(jnp.float32) / hd**0.5
+    s = softcap(s, cfg.attn_logit_softcap)
+    k_pos = jnp.arange(S)[None, :]
+    ok = k_pos <= positions[:, None]
+    if spec.attn_kind == "local" and cfg.local_window is not None:
+        ok &= k_pos > positions[:, None] - cfg.local_window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("nkgs,nskh->nkgh", probs, vc).reshape(N, cfg.n_heads * hd)
+    return dense(p["wo"], o), new_cache
+
+
+def _packed_mla(p, cfg: ModelConfig, x, slots, positions, cache, inv_freq):
+    from repro.models.attention import _mla_qkv_rope  # same math, (N,1) shaped
+
+    N, _ = x.shape
+    H = cfg.n_heads
+    nope, rope, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / ((nope + rope) ** 0.5)
+    q_nope, q_rope, ckv, krope = _mla_qkv_rope(p, cfg, x[:, None, :], positions[:, None], inv_freq)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]  # (N,H,*)
+    ckv, krope = ckv[:, 0], krope[:, 0]  # (N,L), (N,rope)
+
+    cc = cache["ckv"].at[slots, positions].set(ckv.astype(cache["ckv"].dtype))
+    cr = cache["krope"].at[slots, positions].set(krope.astype(cache["krope"].dtype))
+    new_cache = {"ckv": cc, "krope": cr}
+
+    S = cc.shape[1]
+    w_up = p["kv_up"]["w"].reshape(cfg.kv_lora_rank, H, nope + vh)
+    w_uk, w_uv = w_up[..., :nope], w_up[..., nope:]
+    q_eff = jnp.einsum("nhp,lhp->nhl", q_nope, w_uk.astype(x.dtype))
+    c = cc[slots].astype(x.dtype)  # (N,S,L)
+    kr = cr[slots].astype(x.dtype)  # (N,S,rope)
+    s = jnp.einsum("nhl,nsl->nhs", q_eff, c) + jnp.einsum("nhr,nsr->nhs", q_rope, kr)
+    s = s.astype(jnp.float32) * scale
+    ok = jnp.arange(S)[None, :] <= positions[:, None]
+    s = jnp.where(ok[:, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("nhs,nsl->nhl", probs, c)
+    o = jnp.einsum("nhl,lhv->nhv", o_lat, w_uv.astype(x.dtype)).reshape(N, H * vh)
+    return dense(p["wo"], o), new_cache
+
+
+def _packed_layer(p, cfg, spec, x, slots, positions, cache, inv_freq):
+    hn = rms_norm(p["norm1"], x, cfg.norm_eps)
+    if cfg.mla:
+        y, new_cache = _packed_mla(p["mixer"], cfg, hn, slots, positions, cache, inv_freq)
+    else:
+        y, new_cache = _packed_gqa(p["mixer"], cfg, spec, hn, slots, positions, cache, inv_freq)
+    if cfg.post_norm:
+        y = rms_norm(p["post_norm1"], y, cfg.norm_eps)
+    x = x + y
+    if spec.ffn != "none":
+        hn = rms_norm(p["norm2"], x, cfg.norm_eps)
+        if spec.ffn == "dense":
+            y = ffn(p["ffn"], hn, cfg.act, cfg.glu)
+        else:
+            y, _ = moe.moe_apply(p["ffn"], cfg, hn[None])  # (1,N,d)
+            y = y[0]
+        if cfg.post_norm:
+            y = rms_norm(p["post_norm2"], y, cfg.norm_eps)
+        x = x + y
+    return x, new_cache
+
+
+def packed_step(model: Model, params, cache, tokens, slots, positions):
+    """tokens/slots/positions: (N,) -> (logits (N, vocab), new cache).
+
+    Padding rows point at a scratch slot (engine allocates one extra cache
+    row); their outputs are ignored by the caller.
+    """
+    cfg = model.cfg
+    assert supports_packed(cfg), cfg.name
+    x = jnp.take(params["embed"], tokens, axis=0).astype(model.dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model**0.5, model.dtype)
+
+    new_prefix = []
+    for i in range(cfg.n_prefix_layers):
+        x, nc = _packed_layer(
+            params["stack"]["prefix"][i], cfg, cfg.layer_specs[i], x, slots, positions,
+            cache["prefix"][i], model.inv_freq,
+        )
+        new_prefix.append(nc)
+
+    def body(x, xs):
+        p_period, cache_period = xs
+        new_cache = {}
+        for i in range(cfg.scan_period):
+            x, nc = _packed_layer(
+                p_period[str(i)], cfg, cfg.period_specs[i], x, slots, positions,
+                cache_period[str(i)], model.inv_freq,
+            )
+            new_cache[str(i)] = nc
+        return x, new_cache
+
+    if cfg.n_periods:
+        x, new_periods = jax.lax.scan(
+            body, x, (params["stack"]["periods"], cache["periods"])
+        )
+    else:
+        new_periods = cache["periods"]
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap((x @ w.astype(x.dtype)).astype(jnp.float32), cfg.final_logit_softcap)
+    return logits, {"prefix": new_prefix, "periods": new_periods}

@@ -1,0 +1,73 @@
+"""KV-cache prefetch planning (paper §III, conditions (1) and (2)).
+
+The planner owns the spatial half of the paper's co-design: given the
+prefetch-buffer capacity (the M3D BEOL memory — 512 MB on the TPUv6e-like
+config) and the decode set's per-request context lengths, it decides which
+KV data the next attention op will find resident on-chip.
+
+The paper prefetches ONE LAYER ahead (layer-by-layer schedule), so capacity
+is compared against a single layer's KV for the packed decode batch:
+    bytes_per_layer = sum_i ctx_len_i * kv_bytes_per_token_layer
+Residency is allocated decode-request-first, longest-context-first (longest
+contexts are the most HBM-bound — they benefit most per byte).
+
+The temporal half (is there enough residual HBM bandwidth during the packed
+compute-bound phase to actually fill the buffer?) depends on the hardware
+cost model and is computed by ``repro.sim``; the planner reports the bytes it
+*wants* moved, the sim reports the bytes that *can* move.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefetchPlan:
+    """Residency decision for one packed step (one layer lookahead)."""
+
+    buffer_bytes: int
+    kv_bytes_per_token_layer: int
+    # per decode request: tokens of its KV (one layer) resident on-chip
+    resident_tokens: Dict[int, int]
+    total_tokens: int
+
+    @property
+    def resident_total(self) -> int:
+        return sum(self.resident_tokens.values())
+
+    @property
+    def coverage(self) -> float:
+        """Fraction of the next attention op's KV bytes already on-chip."""
+        if self.total_tokens == 0:
+            return 1.0
+        return self.resident_total / self.total_tokens
+
+    @property
+    def prefetch_bytes(self) -> int:
+        """Bytes the schedule wants streamed during the compute-bound phase."""
+        return self.resident_total * self.kv_bytes_per_token_layer
+
+
+class PrefetchPlanner:
+    def __init__(self, model_cfg: ModelConfig, buffer_bytes: int):
+        self.cfg = model_cfg
+        self.buffer_bytes = int(buffer_bytes)
+        self.kv_btl = model_cfg.kv_bytes_per_token_layer
+
+    def plan(self, ctx_lens: Dict[int, int]) -> PrefetchPlan:
+        """ctx_lens: {request id: KV tokens}. Longest-context-first fill."""
+        if self.kv_btl == 0:  # attention-free arch: nothing to prefetch
+            return PrefetchPlan(self.buffer_bytes, 0, {r: 0 for r in ctx_lens},
+                                sum(ctx_lens.values()))
+        budget = self.buffer_bytes // self.kv_btl  # tokens that fit (one layer)
+        resident: Dict[int, int] = {}
+        for rid in sorted(ctx_lens, key=lambda r: -ctx_lens[r]):
+            take = min(ctx_lens[rid], budget)
+            resident[rid] = take
+            budget -= take
+        return PrefetchPlan(
+            self.buffer_bytes, self.kv_btl, resident, sum(ctx_lens.values())
+        )

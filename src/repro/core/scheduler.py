@@ -1,0 +1,152 @@
+"""Packing-prefetch scheduler — the paper's §III, backend-agnostic.
+
+One scheduler drives both the *real* JAX serving engine (repro.serving.engine)
+and the *analytical* service-level simulator (repro.sim.service): the engine
+executes StepPlans on a model, the simulator prices the same StepPlans with
+the hardware cost model. This guarantees the simulated results (paper Figs
+7/8) describe exactly the scheduling policy the runnable system implements.
+
+Policy (Sarathi-Serve style, as adopted by the paper):
+  * decode-first: every active decode request is scheduled each step;
+  * chunked-prefill packing: the remaining token budget (chunk_size minus
+    decode tokens) is filled with the next prefill chunk — at most one
+    request is in prefill at a time (matching the paper's time diagram);
+  * prefetch: each StepPlan carries a PrefetchPlan for the *next* attention
+    op's KV (one-layer lookahead), built from the decode set's context
+    lengths and the on-chip prefetch-buffer capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.prefetch import PrefetchPlan, PrefetchPlanner
+from repro.serving.request import Request, State
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    chunk_size: int = 512  # token budget per packed step
+    max_decode_batch: int = 32  # concurrent decode slots
+    prefetch_buffer_bytes: int = 512 * 1024 * 1024  # the M3D buffer (paper: 512MB)
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One packed execution cycle."""
+
+    decode_slots: List[int]  # engine slots decoding this step
+    decode_rids: List[int]
+    prefill_rid: Optional[int]  # request whose chunk is packed in
+    prefill_start: int = 0  # chunk token range [start, start+len)
+    prefill_len: int = 0
+    prefill_slot: Optional[int] = None
+    prefill_finishes: bool = False  # last chunk -> emits first token
+    prefetch: Optional[PrefetchPlan] = None
+
+    @property
+    def total_tokens(self) -> int:
+        return len(self.decode_slots) + self.prefill_len
+
+    @property
+    def is_empty(self) -> bool:
+        return self.total_tokens == 0
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig, model_cfg: ModelConfig):
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+        self.planner = PrefetchPlanner(model_cfg, cfg.prefetch_buffer_bytes)
+        self.waiting: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}  # slot -> request (prefill or decode)
+        self.free_slots: List[int] = list(range(cfg.max_decode_batch))
+        self.current_prefill: Optional[Request] = None
+        self.requests: Dict[int, Request] = {}
+
+    # ------------------------------------------------------------------ API
+    def add_request(self, req: Request) -> None:
+        self.requests[req.rid] = req
+        req.state = State.QUEUED
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    def next_step(self, now: float = 0.0) -> Optional[StepPlan]:
+        """Build the next packed step, mutating request bookkeeping."""
+        decode_slots, decode_rids = [], []
+        for slot, req in sorted(self.active.items()):
+            if req.state == State.DECODE:
+                decode_slots.append(slot)
+                decode_rids.append(req.rid)
+
+        budget = self.cfg.chunk_size - len(decode_slots)
+
+        # continue / admit prefill
+        if self.current_prefill is None and self.waiting and self.free_slots and budget > 0:
+            req = self.waiting.popleft()
+            req.slot = self.free_slots.pop(0)
+            req.state = State.PREFILL
+            self.active[req.slot] = req
+            self.current_prefill = req
+
+        plan = StepPlan(decode_slots=decode_slots, decode_rids=decode_rids, prefill_rid=None)
+        pre = self.current_prefill
+        if pre is not None and budget > 0:
+            take = min(budget, pre.prompt_len - pre.prefill_pos)
+            plan.prefill_rid = pre.rid
+            plan.prefill_slot = pre.slot
+            plan.prefill_start = pre.prefill_pos
+            plan.prefill_len = take
+            plan.prefill_finishes = pre.prefill_pos + take >= pre.prompt_len
+            if pre.schedule_time is None:
+                pre.schedule_time = now
+
+        if plan.is_empty:
+            return None
+
+        # prefetch lookahead: the decode set whose attention follows this
+        # packed compute phase (current decodes + the request finishing prefill)
+        ctx = {r: self.requests[r].context_len for r in decode_rids}
+        if plan.prefill_finishes and plan.prefill_rid is not None:
+            ctx[plan.prefill_rid] = pre.prompt_len
+        plan.prefetch = self.planner.plan(ctx)
+        return plan
+
+    def complete_step(self, plan: StepPlan, now: float = 0.0) -> List[int]:
+        """Advance request states after a step executed. Returns finished rids."""
+        finished: List[int] = []
+        if plan.prefill_rid is not None:
+            req = self.requests[plan.prefill_rid]
+            req.prefill_pos += plan.prefill_len
+            if plan.prefill_finishes:
+                # last chunk computed the first output token
+                req.state = State.DECODE
+                req.first_token_time = now
+                req.token_times.append(now)
+                self.current_prefill = None
+
+        for rid in plan.decode_rids:
+            req = self.requests[rid]
+            req.token_times.append(now)
+
+        # completion by output length (engine appends tokens itself; the sim
+        # counts). Engine calls note_token() before complete_step.
+        for rid in list(plan.decode_rids) + (
+            [plan.prefill_rid] if plan.prefill_finishes and plan.prefill_rid is not None else []
+        ):
+            req = self.requests[rid]
+            if len(req.output) >= req.max_new_tokens:
+                req.state = State.DONE
+                req.finish_time = now
+                finished.append(rid)
+                if req.slot is not None:
+                    del self.active[req.slot]
+                    self.free_slots.append(req.slot)
+                    self.free_slots.sort()
+                    req.slot = None  # keep rid -> req for metrics
+        return finished

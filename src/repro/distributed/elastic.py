@@ -1,0 +1,44 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+Checkpoints store unsharded host arrays (training/checkpoint.py); a restart
+on a shrunken/grown device set rebuilds templates under the NEW mesh and
+device_puts each leaf with its new NamedSharding — training resumes with a
+different DP width without conversion tooling. The data pipeline is
+deterministic in (seed, step, shard), so resharding the data is just
+re-deriving shard ids (training/data.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.training.checkpoint import CheckpointManager
+
+
+def elastic_restore(
+    mgr: CheckpointManager,
+    cfg: ModelConfig,
+    mesh,
+    params_shape: Any,
+    opt_shape: Any,
+    step: int | None = None,
+    fsdp: bool = True,
+):
+    """Build (params, opt) templates under `mesh` and restore into them."""
+    p_sh = (shd.fsdp_shardings if fsdp else shd.param_shardings)(cfg, mesh, params_shape)
+    o_sh = shd.opt_state_shardings(cfg, mesh, params_shape, opt_shape, fsdp=fsdp)
+
+    def to_template(shape_tree, shard_tree):
+        return jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            shape_tree, shard_tree,
+        )
+
+    template = {
+        "params": to_template(params_shape, p_sh),
+        "opt": to_template(opt_shape, o_sh),
+    }
+    return mgr.restore(template, step=step)

@@ -1,0 +1,250 @@
+"""Logical-axis sharding rules: pytree path -> PartitionSpec.
+
+Mesh axes: optional "pod" (multi-pod DP), "data" (DP / sequence-parallel for
+batch-1 long-context), "model" (TP + EP).
+
+Megatron-style TP: QKV / gate / up column-sharded, O / down row-sharded,
+vocab column-sharded head, experts sharded over "model" (EP). Stacked-period
+leaves ("periods", encdec "enc"/"dec", cross caches) get a leading None for
+the layer-stack dim. Anything not matched replicates.
+
+All rules check divisibility before sharding an axis — a dimension that does
+not divide by the mesh axis falls back to replication (e.g. kv_heads=2 on a
+16-way model axis), keeping every (arch x mesh) cell compilable.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, names) -> Optional[str]:
+    """names if dim divides by the mesh axis product, else None (replicate)."""
+    return names if dim % _axis_size(mesh, names) == 0 else None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig, mesh: Mesh, path, leaf) -> P:
+    name = _path_str(path)
+    shape = leaf.shape
+    stacked = (
+        "periods" in name or name.startswith("enc/") or name.startswith("dec/")
+    )
+    off = 1 if stacked else 0
+    nd = len(shape)
+
+    def spec(*dims):
+        """dims for the un-stacked suffix; prepend Nones for stack dims."""
+        lead = [None] * (nd - len(dims))
+        full = lead + [(_fit(mesh, shape[nd - len(dims) + i], d) if d else None)
+                       for i, d in enumerate(dims)]
+        return P(*full)
+
+    # ---- embeddings / head -------------------------------------------------
+    if name == "embed" or name.endswith("/embed"):
+        return spec("model", None)  # vocab-sharded
+    if name == "lm_head":
+        return spec(None, "model")
+    if "pos_dec" in name or name == "pos":
+        # position tables are gathered by dynamic index — replicate (small)
+        return spec(None, None)
+
+    # ---- attention ---------------------------------------------------------
+    if "/wq/" in name or "/wk/" in name or "/wv/" in name:
+        if name.endswith("/w"):
+            return spec(None, "model")
+        return spec("model")  # bias
+    if "/wo/" in name:
+        if name.endswith("/w"):
+            return spec("model", None)
+        return spec(None)  # bias on d_model: replicate
+    if "/q_up/" in name or "/kv_up/" in name:
+        return spec(None, "model") if name.endswith("/w") else spec("model")
+    if "/q_down/" in name or "/kv_down/" in name:
+        return spec(None, None) if name.endswith("/w") else spec(None)
+
+    # ---- MoE ---------------------------------------------------------------
+    if "/experts/" in name:
+        # leaves: (..., E, d_in, d_out) or (..., E, d_out) bias — EP over model
+        if name.endswith("/w"):
+            return spec("model", None, None)
+        return spec("model", None)
+    if "/router/" in name:
+        return spec(None, None) if name.endswith("/w") else spec(None)
+    if "/shared/" in name or "/ffn/" in name:
+        if name.endswith("up/w") or name.endswith("gate/w"):
+            return spec(None, "model")
+        if name.endswith("down/w"):
+            return spec("model", None)
+        if name.endswith("up/b") or name.endswith("gate/b"):
+            return spec("model")
+        return spec(None)
+
+    # ---- mamba -------------------------------------------------------------
+    if "/in_proj/" in name or "/x_proj/" in name or "/dt_proj/" in name:
+        return spec(None, "model") if name.endswith("/w") else spec("model")
+    if "/out_proj/" in name:
+        return spec("model", None) if name.endswith("/w") else spec(None)
+    if "conv_w" in name:
+        return spec(None, "model")
+    if "conv_b" in name or "A_log" in name or name.endswith("/D") or "dt_bias" in name \
+            or "norm_scale" in name:
+        return spec("model") if nd - off == 1 else spec("model", None)
+
+    # norms, scalars, everything else: replicate
+    return P(*([None] * nd))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape):
+    """Map a params pytree (of ShapeDtypeStructs or arrays) to NamedShardings."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(cfg, mesh, path, leaf)),
+        params_shape,
+    )
+
+
+def fsdp_spec(cfg: ModelConfig, mesh: Mesh, path, leaf) -> P:
+    """TP spec + ZeRO/FSDP: additionally shard the largest still-replicated
+    dim over the DP axes. XLA inserts the per-layer all-gathers (FSDP) for
+    the forward/backward and keeps optimizer state fully sharded."""
+    base = param_spec(cfg, mesh, path, leaf)
+    dp = dp_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+    dims = list(base) + [None] * (len(leaf.shape) - len(base))
+    order = sorted(range(len(leaf.shape)), key=lambda i: -leaf.shape[i])
+    for i in order:
+        if dims[i] is None and leaf.shape[i] % dp_size == 0 and leaf.shape[i] >= dp_size:
+            dims[i] = dp if len(dp) > 1 else dp[0]
+            break
+    return P(*dims)
+
+
+def fsdp_shardings(cfg: ModelConfig, mesh: Mesh, params_shape):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, fsdp_spec(cfg, mesh, path, leaf)),
+        params_shape,
+    )
+
+
+# ---------------------------------------------------------------------------
+# batches / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_shape, axes=None):
+    dp = tuple(axes) if axes is not None else dp_axes(mesh)
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        b = _fit(mesh, leaf.shape[0], dp)
+        return NamedSharding(mesh, P(*([b] + [None] * (nd - 1))))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def cache_spec(cfg: ModelConfig, mesh: Mesh, path, leaf, batch: int,
+               shard_hd: bool = True, sp_decode: bool = False) -> P:
+    """KV caches / SSM states. Leaves:
+      prefix KV:   (B, S, KV, hd) | MLA (B, S, L) | ssm (B, ...)
+      periods KV:  (n_periods, B, S, KV, hd) ...
+      encdec:      (L, B, S, KV, hd)
+    Batch -> DP; with batch=1 (long_500k) the KV sequence shards over "data"
+    (sequence parallelism); KV heads -> model when divisible, else head_dim,
+    else replicate.
+    """
+    name = _path_str(path)
+    shape = leaf.shape
+    stacked = "periods" in name or name.startswith("self/") or name.startswith("cross/")
+    off = 1 if stacked else 0
+    dp = dp_axes(mesh)
+    body = shape[off:]
+    nd = len(body)
+
+    b_ax = _fit(mesh, body[0], dp)
+    sp_ax = None
+    if b_ax is None and batch == 1 and nd >= 2:
+        sp_ax = _fit(mesh, body[1], "data")  # sequence-parallel KV
+    elif sp_decode and nd >= 2:
+        sp_ax = _fit(mesh, body[1], "model")  # batched decode: seq over model
+
+    dims = [b_ax]
+    if "ssm" in name:
+        # (B, nh, hd, ds) / (B, d_in, ds): shard heads/channels over model
+        dims += [_fit(mesh, body[1], "model")] + [None] * (nd - 2)
+    elif "conv" in name:
+        dims += [None, _fit(mesh, body[2], "model")] if nd == 3 else [None] * (nd - 1)
+    elif name.endswith("ckv") or name.endswith("krope"):
+        dims += [sp_ax] + [None] * (nd - 2)  # MLA latent: heads don't exist
+    elif nd == 4:  # (B, S, KV, hd)
+        kv_ax = _fit(mesh, body[2], "model") if sp_ax is None else None
+        hd_ax = (_fit(mesh, body[3], "model")
+                 if (kv_ax is None and sp_ax is None and shard_hd) else None)
+        dims += [sp_ax, kv_ax, hd_ax]
+    else:
+        dims += [None] * (nd - 1)
+    return P(*([None] * off + dims))
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape, batch: int,
+                    shard_hd: bool = True, sp_decode: bool = False):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(cfg, mesh, path, leaf, batch, shard_hd=shard_hd,
+                             sp_decode=sp_decode)
+        ),
+        cache_shape,
+    )
+
+
+def opt_state_shardings(cfg: ModelConfig, mesh: Mesh, params_shape, opt_shape,
+                        fsdp: bool = True):
+    """m/v mirror params (FSDP'd by default — ZeRO); the step counter replicates."""
+    pshard = (fsdp_shardings if fsdp else param_shardings)(cfg, mesh, params_shape)
+    from repro.training.optimizer import OptState
+
+    return OptState(
+        step=NamedSharding(mesh, P()),
+        m=pshard,
+        v=pshard,
+    )
+
+
+def replicated(mesh: Mesh, tree_shape):
+    return jax.tree.map(lambda l: NamedSharding(mesh, P(*([None] * len(l.shape)))),
+                        tree_shape)

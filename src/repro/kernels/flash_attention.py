@@ -1,0 +1,138 @@
+"""FlashAttention-2 style Pallas TPU kernel (prefill / training path).
+
+Grid (B, H, nq, nk), nk innermost and sequential ("arbitrary"): the running
+(m, l, acc) state lives in VMEM scratch across nk steps while Mosaic's
+pipeline double-buffers the next K/V block's HBM->VMEM DMA under the current
+block's MXU work — the paper's overlap principle at the op level.
+
+Supports: causal masking, sliding window (gemma2 local layers), logit
+softcap, GQA (K/V head indexed by q_head // group), fp32 online softmax.
+Block sizes default to 128 (MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1.0e30
+LANES = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale, causal, window, softcap_val, block_q, block_k,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # block-level skip: fully above the diagonal (causal) or left of the window
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_start <= q_start + block_q - 1
+    if window is not None:
+        run &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        if softcap_val is not None:
+            s = softcap_val * jnp.tanh(s / softcap_val)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]  # (bq, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new) * mask.astype(jnp.float32)  # masked rows stay 0
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-37)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    """q: (B, H, Sq, d); k, v: (B, KV, Sk, d) -> (B, H, Sq, d)."""
+    B, H, Sq, d = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    assert H % KV == 0 and Sq % block_q == 0 and Sk % block_k == 0
+    group = H // KV
+    scale = 1.0 / d**0.5
+    grid = (B, H, Sq // block_q, Sk // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window, softcap_val=softcap,
+        block_q=block_q, block_k=block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

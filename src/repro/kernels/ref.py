@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every kernel. Tests assert_allclose kernel vs these."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def flash_attention_ref(
+    q, k, v, *, causal=True, window: Optional[int] = None, softcap: Optional[float] = None
+):
+    """q: (B,H,Sq,d); k/v: (B,KV,Sk,d) -> (B,H,Sq,d). fp32 softmax."""
+    B, H, Sq, d = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgtd,bksd->bkgts", qf, kf) / d**0.5
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bksd->bkgtd", p, vf)
+    return o.reshape(B, H, Sq, d).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q, k, v, lengths, *, window: Optional[int] = None, softcap: Optional[float] = None
+):
+    """q: (B,KV,G,d); k/v: (B,KV,S,d); lengths (B,) -> (B,KV,G,d)."""
+    B, KV, G, d = q.shape
+    S = k.shape[2]
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32), k.astype(jnp.float32)) / d**0.5
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(S)[None, :]
+    mask = k_pos < lengths[:, None]  # (B, S)
+    if window is not None:
+        mask &= k_pos > (lengths[:, None] - 1) - window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, h0=None):
+    """Sequential (exact) SSD recurrence oracle.
+
+    x: (B,S,nh,hd), dt: (B,S,nh) fp32, A: (nh,), Bm/Cm: (B,S,G,ds).
+    Returns y (B,S,nh,hd), hT (B,nh,hd,ds).
+    """
+    B, S, nh, hd = x.shape
+    G, ds = Bm.shape[2], Bm.shape[3]
+    rep = nh // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)  # (B,S,nh,ds)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(dtf[:, t] * A)  # (B,nh)
+        upd = jnp.einsum("bh,bhd,bhs->bhds", dtf[:, t], xf[:, t], Bh[:, t])
+        h = h * a[..., None, None] + upd
+        y = jnp.einsum("bhds,bhs->bhd", h, Ch[:, t])
+        return h, y
+
+    h = jnp.zeros((B, nh, hd, ds), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    ys = []
+    for t in range(S):
+        h, y = step(h, t)
+        ys.append(y)
+    y = jnp.stack(ys, axis=1)
+    return y.astype(x.dtype), h

@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import — jax locks the device
+count at first init, and only the dry-run wants 512 placeholder devices.
+
+Per cell:
+  * builds ShapeDtypeStruct inputs (no allocation) with NamedShardings from
+    repro.distributed.sharding;
+  * jit(step).lower(...).compile() against the 16x16 single-pod mesh or the
+    2x16x16 multi-pod mesh;
+  * records memory_analysis(), cost_analysis(), and collective-traffic bytes
+    parsed from the optimized HLO — the roofline inputs (EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.1-8b \
+      --shape train_4k [--multi-pod] [--out benchmarks/dryrun_results]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, cell_applicable, input_specs
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.training import optimizer as opt
+from repro.training.train_loop import make_train_step
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _sds(tree, dtype=None, shardings=None):
+    def mk(leaf, sh):
+        dt = dtype if dtype is not None else leaf.dtype
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            dt = leaf.dtype
+        return jax.ShapeDtypeStruct(leaf.shape, dt, sharding=sh)
+
+    if shardings is None:
+        return jax.tree.map(lambda l: mk(l, None), tree)
+    return jax.tree.map(mk, tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_KIND_RE = re.compile(
+    r"\s(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]\{")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_BODY_RE = re.compile(r"body=(%?[\w\.\-]+)")
+
+
+def _comp_name(line: str):
+    """Computation-definition header -> name (handles tuple-typed params)."""
+    if line.startswith(" ") or ") -> " not in line or not line.rstrip().endswith("{"):
+        return None
+    toks = line.split()
+    if not toks:
+        return None
+    name = toks[1] if toks[0] == "ENTRY" and len(toks) > 1 else toks[0]
+    return name.lstrip("%")
+
+
+def _body_depths(hlo: str) -> dict:
+    """Map computation name -> while-nesting depth (0 = not a loop body).
+
+    XLA counts a while body once in cost_analysis; collectives inside must be
+    scaled by the loop trip product. Depth is computed by chaining
+    body-of-while relations through the computations the whiles live in.
+    """
+    # computation -> list of body computations of whiles it contains
+    contains: dict = {}
+    cur = None
+    for line in hlo.splitlines():
+        name = _comp_name(line)
+        if name is not None:
+            cur = name
+            contains.setdefault(cur, [])
+            continue
+        if cur and "while(" in line:
+            mb = _BODY_RE.search(line)
+            if mb:
+                contains[cur].append(mb.group(1).lstrip("%"))
+
+    depth: dict = {}
+
+    def walk(comp, d):
+        for body in contains.get(comp, []):
+            if depth.get(body, -1) < d + 1:
+                depth[body] = d + 1
+                walk(body, d + 1)
+
+    roots = set(contains) - {b for bs in contains.values() for b in bs}
+    for r in roots:
+        walk(r, 0)
+    return depth
+
+
+def parse_collective_bytes(hlo: str, trips_by_depth=(1.0, 1.0, 1.0)) -> dict:
+    """Sum operand bytes per collective class from optimized HLO text.
+
+    ``trips_by_depth[d]`` scales collectives found inside loop bodies at
+    nesting depth d+1 (cost_analysis and a flat parse count them once).
+    """
+    depth = _body_depths(hlo)
+    out = {c: 0.0 for c in COLLECTIVES}
+    raw = {c: 0.0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    cur_depth = 0
+    for line in hlo.splitlines():
+        name = _comp_name(line)
+        if name is not None:
+            cur_depth = depth.get(name, 0)
+            continue
+        if "=" not in line:
+            continue
+        mk = _KIND_RE.search(line)
+        if not mk or "-done(" in line:
+            continue
+        kind = mk.group(1)
+        # result may be a tuple (XLA combines grad all-reduces): sum every
+        # tensor type on the LHS of the op
+        lhs = line[: mk.start()]
+        result_bytes = 0
+        for dtype, dims in _TYPE_RE.findall(lhs):
+            if dtype not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            result_bytes += n * DTYPE_BYTES[dtype]
+        if result_bytes == 0:
+            continue
+        # group size (for converting result size -> operand size)
+        gsize = None
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            gsize = len(gm.group(1).split(","))
+        else:
+            gm = _GROUPS_IOTA_RE.search(line)
+            if gm:
+                gsize = int(gm.group(2))
+        gsize = gsize or 1
+        if kind == "all-gather":
+            operand = result_bytes / max(gsize, 1)
+        elif kind == "reduce-scatter":
+            operand = result_bytes * gsize
+        else:  # all-reduce / all-to-all / collective-permute: same-size operand
+            operand = result_bytes
+        mult = 1.0
+        if cur_depth > 0:
+            mult = trips_by_depth[min(cur_depth, len(trips_by_depth)) - 1]
+        raw[kind] += operand
+        out[kind] += operand * mult
+        counts[kind] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    out["total_raw"] = sum(raw[c] for c in COLLECTIVES)
+    out.update(out_counts)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+
+# gradient-accumulation microbatches per train cell: sized so activations fit
+# HBM-class memory at global_batch=256 x 4K (bigger models -> more microbatches)
+def default_microbatches(cfg) -> int:
+    n = cfg.param_count()
+    if n > 1e11:
+        return 16
+    if n > 3e10:
+        return 8
+    if n > 5e9:
+        return 4
+    return 2
+
+
+def build_cell(arch: str, shape_name: str, mesh, microbatches: int = 0,
+               opts: frozenset = frozenset()):
+    """Returns (jitted fn, list of SDS args) for one cell.
+
+    opts: named optimization toggles for §Perf iterations —
+      sp_decode        sequence-parallel flash-decoding over model/data axis
+      cache_replicate_heads  don't shard KV head_dim when kv_heads < model axis
+      kv_fp8           fp8(e4m3) KV-cache storage (halves decode KV traffic)
+      zero1            ZeRO-1: opt state FSDP'd, params TP-sharded+DP-replicated
+      no_tp            pure DP (replicated weights) — right-size small models
+    """
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if "sp_decode" in opts:
+        cfg = _dc.replace(cfg, sp_decode=True)
+    shape = SHAPES[shape_name]
+    batch_sds = _sds(input_specs(cfg, shape), shardings=None)
+    # no_tp: the model axis is free — fold it into DP (full 256-way DP)
+    b_axes = tuple(mesh.axis_names) if "no_tp" in opts else None
+    batch_sh = shd.batch_shardings(cfg, mesh, batch_sds, axes=b_axes)
+    batch = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        batch_sds, batch_sh,
+    )
+
+    if shape.kind == "train":
+        model = build_model(cfg, dtype=jnp.bfloat16, remat=True)
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        # FSDP/ZeRO-3 default: fp32 master weights + optimizer sharded TP x DP
+        if "no_tp" in opts:
+            p_sh = shd.replicated(mesh, params_shape)
+        elif "zero1" in opts:
+            p_sh = shd.param_shardings(cfg, mesh, params_shape)
+        else:
+            p_sh = shd.fsdp_shardings(cfg, mesh, params_shape)
+        params = _sds(params_shape, shardings=p_sh)
+        opt_shape = jax.eval_shape(opt.init_opt_state, params_shape)
+        o_sh = shd.opt_state_shardings(cfg, mesh, params_shape, opt_shape)
+        opt_sds = _sds(opt_shape, shardings=o_sh)
+        mb = microbatches or default_microbatches(cfg)
+        fn = make_train_step(model, opt.OptimizerConfig(), microbatches=mb,
+                             bf16_params="bf16_params" in opts,
+                             param_shardings=p_sh if "bf16_params" in opts else None)
+        return fn, (params, opt_sds, batch)
+
+    # serving cells: bf16 weights + cache
+    model = build_model(cfg, dtype=jnp.bfloat16)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = shd.param_shardings(cfg, mesh, params_shape)
+    params = _sds(params_shape, dtype=jnp.bfloat16, shardings=p_sh)
+
+    B = shape.global_batch
+    kv_dtype = jnp.float8_e4m3fn if "kv_fp8" in opts else jnp.bfloat16
+    cache_shape = model.cache_specs(B, shape.seq_len, kv_dtype)
+    c_sh = shd.cache_shardings(cfg, mesh, cache_shape, batch=B,
+                               shard_hd="cache_replicate_heads" not in opts,
+                               sp_decode="sp_decode" in opts and B > 1)
+    cache = _sds(cache_shape, shardings=c_sh)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+
+    if shape.kind == "prefill":
+        fn = jax.jit(model.prefill, donate_argnums=(2,))
+        return fn, (params, batch, cache, index)
+    fn = jax.jit(model.decode_step, donate_argnums=(2,))
+    return fn, (params, batch["tokens"], cache, index)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, save_hlo: bool = False,
+             microbatches: int = 0, opts: frozenset = frozenset()) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "status": "ok"}
+
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        return rec
+    try:
+        from repro.distributed.ctx import use_activation_mesh
+
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        # no_tp runs pure DP: activation-sharding constraints (SP over the
+        # model axis) would conflict with model-axis batch sharding
+        act_mesh = None if "no_tp" in opts else mesh
+        t0 = time.time()
+        with mesh, use_activation_mesh(act_mesh):
+            fn, args = build_cell(arch, shape_name, mesh, microbatches=microbatches,
+                                  opts=opts)
+            if not hasattr(fn, "lower"):
+                fn = jax.jit(fn)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        # loop-trip multipliers for in-body collectives: train nests the
+        # period scan inside the microbatch scan (fwd+bwd); serving has the
+        # period scan outermost. cost_analysis counts bodies once.
+        P = max(cfg.n_periods, 1)
+        if shape.kind == "train":
+            mb = microbatches or default_microbatches(cfg)
+            trips = (float(mb), float(mb * P), float(mb * P)) if mb > 1 else (
+                float(P), float(P), float(P))
+        else:
+            mb = 1
+            trips = (float(P), float(P), float(P))
+
+        mem = compiled.memory_analysis()
+        mem_rec = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes", "peak_memory_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_rec[k] = int(v)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        cost_rec = {k: float(v) for k, v in cost.items()
+                    if isinstance(v, (int, float)) and (
+                        "flops" in k or "bytes" in k or "utilization" in k.lower())}
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo, trips_by_depth=trips)
+        rec.update(
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            n_devices=mesh.size,
+            microbatches=mb,
+            memory=mem_rec,
+            cost={k: cost_rec[k] for k in sorted(cost_rec) if k in ("flops", "bytes accessed", "bytes accessed output", "transcendentals")} or cost_rec,
+            collectives=coll,
+            hlo_bytes=len(hlo),
+        )
+        if save_hlo:
+            rec["hlo_text"] = hlo
+        print(compiled.memory_analysis())
+        for k in ("flops", "bytes accessed"):
+            if k in cost:
+                print(f"cost_analysis[{k!r}] = {cost[k]:.3e}")
+        print(f"collectives: { {k: f'{v/2**20:.1f}MiB' for k, v in coll.items() if not k.startswith('n_') and v} }")
+    except Exception as e:  # noqa: BLE001 — record the failure, exit nonzero
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0, help="0 = per-arch default")
+    ap.add_argument("--opts", default="", help="comma-separated perf toggles")
+    ap.add_argument("--tag", default="", help="filename suffix for perf variants")
+    ap.add_argument("--out", default="benchmarks/dryrun_results")
+    args = ap.parse_args()
+
+    opts = frozenset(filter(None, args.opts.split(",")))
+    rec = run_cell(args.arch, args.shape, args.multi_pod,
+                   microbatches=args.microbatches, opts=opts)
+    if opts:
+        rec["opts"] = sorted(opts)
+    os.makedirs(args.out, exist_ok=True)
+    mesh_name = rec["mesh"]
+    suffix = f"__{args.tag}" if args.tag else ""
+    path = os.path.join(args.out, f"{args.arch}__{args.shape}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"[{rec['status']}] {args.arch} x {args.shape} x {mesh_name} -> {path}")
+    if rec["status"] == "error":
+        print(rec["error"])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Drive the full dry-run sweep: every (assigned arch × shape × mesh) cell.
+
+Each cell runs in a fresh subprocess (clean XLA state; a crash in one cell
+cannot take down the sweep). Existing result JSONs are skipped, so the sweep
+is resumable. Paper models (llama3.1-8b/70b) are included for §Perf context.
+
+Usage: PYTHONPATH=src python -m repro.launch.dryrun_all [--out DIR] [--archs a,b]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs.archs import ASSIGNED, PAPER_MODELS
+from repro.configs.shapes import SHAPES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="benchmarks/dryrun_results")
+    ap.add_argument("--archs", default=",".join(ASSIGNED + PAPER_MODELS))
+    ap.add_argument("--timeout", type=int, default=1200)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    archs = [a for a in args.archs.split(",") if a]
+    cells = [
+        (arch, shape, mp)
+        for arch in archs
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+        for mp in (False, True)
+    ]
+    t0 = time.time()
+    done = fail = skipped = 0
+    for i, (arch, shape, mp) in enumerate(cells):
+        mesh = "pod2x16x16" if mp else "pod16x16"
+        path = os.path.join(args.out, f"{arch}__{shape}__{mesh}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                st = json.load(f).get("status")
+            if st in ("ok", "skip"):
+                done += 1
+                continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--out", args.out]
+        if mp:
+            cmd.append("--multi-pod")
+        print(f"[{i+1}/{len(cells)}] {arch} x {shape} x {mesh} "
+              f"(elapsed {time.time()-t0:.0f}s)", flush=True)
+        try:
+            r = subprocess.run(cmd, timeout=args.timeout, capture_output=True, text=True)
+            if r.returncode != 0:
+                fail += 1
+                print(f"  FAILED rc={r.returncode}: {r.stdout[-300:]} {r.stderr[-300:]}",
+                      flush=True)
+            else:
+                done += 1
+        except subprocess.TimeoutExpired:
+            fail += 1
+            print("  TIMEOUT", flush=True)
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "status": "error", "error": "compile timeout"}, f)
+    print(f"sweep complete: ok/skip={done} fail={fail} in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Blocked (flash-style) attention in pure XLA: lax.scan over q/kv blocks.
+
+The models' default path for large T×S — memory O(block²) instead of O(T·S),
+which is what makes the 32K/500K dry-run cells lowerable at all. Mirrors the
+Pallas kernels' math (those are the TPU hot path; this is the portable one).
+
+Supports GQA (grouped heads), causal + sliding-window masks from absolute
+positions, logit softcap, and a `kv_expand` hook that turns a latent KV block
+into per-head K/V on the fly (MLA: ckv -> k_nope/v inside the block loop, so
+the full per-head K is never materialized).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_sdpa(
+    q,  # (B, T, H, dq)
+    kv,  # pytree of (B, S, ...) tensors consumed by kv_expand (or (k, v) pair)
+    q_pos,  # (B, T) absolute positions
+    k_pos,  # (S,) absolute positions
+    *,
+    scale: float,
+    kv_expand: Optional[Callable] = None,  # blocks -> (k (B,bk,KV,dq), v (B,bk,KV,dv))
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+):
+    """Returns (B, T, H, dv). fp32 running softmax; causal by positions."""
+    B, T, H, dq = q.shape
+    if kv_expand is None:
+        k, v = kv
+        kv = (k, v)
+        kv_expand = lambda kb, vb: (kb, vb)
+    S = jax.tree.leaves(kv)[0].shape[1]
+
+    bq = min(block_q, T)
+    bk = min(block_k, S)
+    qp = _pad_to(q, bq, 1)
+    qpos_p = _pad_to(q_pos, bq, 1)
+    kvp = jax.tree.map(lambda x: _pad_to(x, bk, 1), kv)
+    # padded key positions: larger than any real q_pos -> causally masked
+    kpos_p = _pad_to(k_pos.astype(jnp.int32), bk, 0)
+    Sp = jax.tree.leaves(kvp)[0].shape[1]
+    pad_len = Sp - S
+    if pad_len:
+        big = jnp.iinfo(jnp.int32).max // 2
+        kpos_p = kpos_p.at[S:].set(big)
+    Tp = qp.shape[1]
+    nq, nk = Tp // bq, Sp // bk
+
+    # probe one block to get KV head count + value dim
+    probe = jax.eval_shape(
+        kv_expand, *jax.tree.map(lambda x: jax.ShapeDtypeStruct((B, bk) + x.shape[2:], x.dtype), kv)
+    )
+    KV, dv = probe[0].shape[2], probe[1].shape[3]
+    G = H // KV
+
+    def q_block(iq):
+        qb = jax.lax.dynamic_slice_in_dim(qp, iq * bq, bq, axis=1)  # (B,bq,H,dq)
+        qpos_b = jax.lax.dynamic_slice_in_dim(qpos_p, iq * bq, bq, axis=1)  # (B,bq)
+        qg = qb.reshape(B, bq, KV, G, dq)
+
+        # rematerialized: backward saves only per-step carries (m, l, acc),
+        # not the O(bq*bk) score/prob blocks — keeps AD memory flash-like
+        @jax.checkpoint
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            blocks = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, ik * bk, bk, axis=1), kvp
+            )
+            kb, vb = kv_expand(*jax.tree.leaves(blocks))  # (B,bk,KV,dq), (B,bk,KV,dv)
+            kpos_b = jax.lax.dynamic_slice_in_dim(kpos_p, ik * bk, bk, axis=0)
+            s = jnp.einsum("btkgh,bskh->bkgts", qg, kb).astype(jnp.float32) * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            if causal:
+                ok = kpos_b[None, None, :] <= qpos_b[:, :, None]  # (B,bq,bk)
+            else:  # still exclude padded keys
+                ok = jnp.broadcast_to(
+                    (kpos_b < jnp.iinfo(jnp.int32).max // 2)[None, None, :],
+                    (B, bq, bk),
+                )
+            if window is not None:
+                ok &= kpos_b[None, None, :] > qpos_b[:, :, None] - window
+            s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))  # (B,KV,G,bq)
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(ok[:, None, None, :, :], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgts,bskh->bkgth", p.astype(vb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, KV, G, bq), NEG_INF, jnp.float32),
+            jnp.zeros((B, KV, G, bq), jnp.float32),
+            jnp.zeros((B, KV, G, bq, dv), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, bq, H, dv).astype(q.dtype)
+
+    if nq == 1:
+        out = jax.checkpoint(q_block)(0)
+    else:
+        qb_fn = jax.checkpoint(q_block)
+        _, outs = jax.lax.scan(lambda c, iq: (c, qb_fn(iq)), None, jnp.arange(nq))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Tp, H, dv)
+    return out[:, :T]

@@ -1,0 +1,36 @@
+"""Service-level metrics: TTFT / TBT percentiles, scheduling delay, QPS."""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+def percentile(xs: List[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs), p))
+
+
+def summarize(requests: Iterable[Request], horizon: float) -> Dict[str, float]:
+    reqs = [r for r in requests]
+    done = [r for r in reqs if r.finish_time is not None]
+    ttft = [r.first_token_time - r.arrival_time for r in done if r.first_token_time is not None]
+    sched = [r.schedule_time - r.arrival_time for r in done if r.schedule_time is not None]
+    tbt: List[float] = []
+    for r in done:
+        tbt.extend(r.tbt_latencies())
+    out_tokens = sum(len(r.output) for r in reqs)
+    return {
+        "completed": len(done),
+        "submitted": len(reqs),
+        "qps_completed": len(done) / horizon if horizon > 0 else float("nan"),
+        "tokens_per_s": out_tokens / horizon if horizon > 0 else float("nan"),
+        "ttft_p50": percentile(ttft, 50),
+        "ttft_p99": percentile(ttft, 99),
+        "tbt_p50": percentile(tbt, 50),
+        "tbt_p99": percentile(tbt, 99),
+        "sched_delay_p99": percentile(sched, 99),
+    }

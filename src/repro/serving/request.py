@@ -1,0 +1,51 @@
+"""Request lifecycle for the serving engine and the service-level simulator."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, List, Optional
+
+
+class State(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]  # token ids (engine) — sim only uses len(prompt)
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    frames: Optional[Any] = None  # audio frontend stub embeddings (enc-dec archs)
+
+    state: State = State.QUEUED
+    slot: Optional[int] = None
+    prefill_pos: int = 0  # prompt tokens already prefilled
+    output: List[int] = dataclasses.field(default_factory=list)
+
+    # timing (engine: wall clock; sim: simulated seconds)
+    schedule_time: Optional[float] = None  # first time any chunk ran
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def context_len(self) -> int:
+        """Tokens currently in this request's KV cache."""
+        return self.prefill_pos + len(self.output)
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefill_pos >= self.prompt_len
+
+    def tbt_latencies(self) -> List[float]:
+        """Time-between-tokens samples (decode-phase inter-token gaps)."""
+        ts = self.token_times
+        return [b - a for a, b in zip(ts, ts[1:])]

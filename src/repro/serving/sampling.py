@@ -1,0 +1,14 @@
+"""Token sampling."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits):
+    """logits (..., V) -> int32 token ids."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits, rng, temp: float = 1.0):
+    return jax.random.categorical(rng, logits / max(temp, 1e-6), axis=-1).astype(jnp.int32)

@@ -1,0 +1,92 @@
+"""Hardware architecture configs for the performance framework (paper Table I)."""
+from __future__ import annotations
+
+import dataclasses
+
+GB = 1024**3
+MB = 1024**2
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float  # fp16/bf16 FLOP/s
+    hbm_bw: float  # bytes/s
+    hbm_bytes: int
+    compute_buffer: int  # on-chip operand buffer (double-buffered)
+    prefetch_buffer: int  # additional M3D BEOL capacity for prefetched data
+    sa: tuple = (128, 128, 16)  # systolic array (rows, cols, depth)
+    vu: tuple = (128, 16, 16)  # vector unit lanes
+    # Constants below are calibrated by benchmarks/calibrate.py against the
+    # paper's Fig 5/6 speedup anchors + case-3 SLO absolute-time anchors
+    # (speedup anchors all within ±16%; see benchmarks/calibration.json).
+    mxu_efficiency: float = 1.0  # pipeline fill is modelled explicitly
+    # effective fraction of HBM bandwidth usable for streaming (DDR overheads,
+    # refresh, row-buffer misses on strided KV access)
+    bw_efficiency: float = 0.90
+    # read bandwidth of the M3D prefetch buffer, as a multiple of HBM bw —
+    # the calibration drives this to "effectively on-chip-fast", consistent
+    # with the paper's high-speed AOS gain-cell claims.
+    prefetch_read_mult: float = 32.0
+
+    def matmul_time(self, m: int, k: int, n: int) -> float:
+        """Compute-side latency of an (m,k)x(k,n) matmul.
+
+        Weight-stationary dataflow: K/N tile onto the array (quantized to the
+        array dims), M rows *stream* through — so packed-in decode tokens cost
+        only their marginal rows, which is the physical basis of the paper's
+        packing benefit.
+        """
+        rows, cols, _ = self.sa
+        k_q = -(-k // rows) * rows
+        n_q = -(-n // cols) * cols
+        # + rows: systolic pipeline fill/drain — the fixed cost a small
+        # (decode-sized) matmul pays even though its rows stream.
+        flops = 2.0 * (m + rows) * k_q * n_q
+        return flops / (self.peak_flops * self.mxu_efficiency)
+
+    @property
+    def vu_flops(self) -> float:
+        """Vector-unit throughput — decode attention (m~1 GEMV) runs here."""
+        return self.peak_flops / 8.0
+
+    def stream_time(self, nbytes: float) -> float:
+        return nbytes / (self.hbm_bw * self.bw_efficiency)
+
+
+# paper Table I
+TPUV6E = Hardware(
+    name="tpuv6e-like",
+    peak_flops=918e12,
+    hbm_bw=1.64e12,
+    hbm_bytes=32 * GB,
+    compute_buffer=80 * MB,
+    prefetch_buffer=512 * MB,
+    sa=(128, 128, 16),
+    vu=(128, 16, 16),
+)
+
+TPUV7 = Hardware(
+    name="tpuv7-like",
+    peak_flops=4614e12,
+    hbm_bw=7.4e12,
+    hbm_bytes=220 * GB,
+    compute_buffer=160 * MB,
+    prefetch_buffer=1 * GB,
+    sa=(256, 256, 16),
+    vu=(256, 32, 16),
+)
+
+# grading/roofline constants (TPU v5e-class) — used ONLY by benchmarks/roofline.py
+V5E_GRADING = Hardware(
+    name="v5e-grading",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    hbm_bytes=16 * GB,
+    compute_buffer=128 * MB,
+    prefetch_buffer=0,
+    mxu_efficiency=1.0,  # roofline terms use peak by definition
+    bw_efficiency=1.0,
+)
+
+HARDWARE = {h.name: h for h in (TPUV6E, TPUV7, V5E_GRADING)}

@@ -1,0 +1,164 @@
+"""Service-level simulation (paper case studies 3 & 4).
+
+Drives the SAME Scheduler the real engine uses, pricing each StepPlan with
+the stage cost model: a discrete-event loop over Poisson arrivals measuring
+TBT percentiles, scheduling delay, and throughput under an SLO.
+
+Method mirrors §V: SLO threshold = simulated P99 TBT at the reference
+condition (32 concurrent decode requests × 4K KV, chunk 512); throughput =
+the largest arrival rate whose P99 TBT meets the SLO with P99 scheduling
+delay <= 1 s; bandwidth savings = how much extra HBM bandwidth packing-only
+needs to match packing-prefetch throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.serving.metrics import percentile, summarize
+from repro.serving.request import Request
+from repro.serving.workload import WorkloadSpec, sample_requests
+from repro.sim.hardware import Hardware
+from repro.sim.stage import simulate_stage
+
+KV_BUCKET = 4096
+
+
+@dataclasses.dataclass
+class ServiceResult:
+    metrics: Dict[str, float]
+    steps: int
+    sim_time: float
+
+
+class _StageCostCache:
+    """Memoized stage cost: composition -> seconds (kv bucketed)."""
+
+    def __init__(self, hw: Hardware, cfg: ModelConfig, mode: str, buffer_bytes: float):
+        self.hw, self.cfg, self.mode, self.buffer = hw, cfg, mode, buffer_bytes
+        self.cache: Dict[Tuple[int, int, int], float] = {}
+
+    def cost(self, n_p: int, prefill_ctx: int, n_d: int, kv_d: int) -> float:
+        kv_b = -(-kv_d // KV_BUCKET) * KV_BUCKET if kv_d else 0
+        ctx_b = -(-prefill_ctx // 512) * 512 if prefill_ctx else 0
+        key = (n_p, ctx_b, n_d, kv_b)
+        if key not in self.cache:
+            ctxs = [kv_b // max(n_d, 1)] * n_d if n_d else []
+            r = simulate_stage(
+                self.hw, self.cfg, n_p, ctxs, self.mode,
+                prefill_ctx=ctx_b or n_p, prefetch_buffer=self.buffer,
+            )
+            self.cache[key] = r.stage_time
+        return self.cache[key]
+
+
+def simulate_service(
+    hw: Hardware,
+    cfg: ModelConfig,
+    workload: WorkloadSpec,
+    qps: float,
+    mode: str,  # "packed" | "packed_prefetch"
+    n_requests: int = 200,
+    chunk: int = 512,
+    max_decode_batch: int = 32,
+    prefetch_buffer: Optional[float] = None,
+    seed: int = 0,
+    max_steps: int = 2_000_000,
+) -> ServiceResult:
+    buffer_bytes = hw.prefetch_buffer if prefetch_buffer is None else prefetch_buffer
+    if mode == "packed":
+        buffer_bytes = 0.0
+    reqs = sample_requests(workload, n_requests, qps, seed=seed)
+    sched = Scheduler(
+        SchedulerConfig(chunk_size=chunk, max_decode_batch=max_decode_batch,
+                        prefetch_buffer_bytes=int(buffer_bytes)),
+        cfg,
+    )
+    costs = _StageCostCache(hw, cfg, mode, buffer_bytes)
+
+    t = 0.0
+    ai = 0  # next arrival index
+    steps = 0
+    while steps < max_steps:
+        while ai < len(reqs) and reqs[ai].arrival_time <= t:
+            sched.add_request(reqs[ai])
+            ai += 1
+        plan = sched.next_step(now=t)
+        if plan is None:
+            if ai >= len(reqs):
+                break
+            t = max(t, reqs[ai].arrival_time)
+            continue
+        # price the step
+        kv_d = sum(sched.requests[r].context_len for r in plan.decode_rids)
+        prefill_ctx = plan.prefill_start + plan.prefill_len
+        dt = costs.cost(plan.prefill_len, prefill_ctx, len(plan.decode_rids), kv_d)
+        t += dt
+        # emit tokens
+        for rid in plan.decode_rids:
+            sched.requests[rid].output.append(0)
+        if plan.prefill_finishes and plan.prefill_rid is not None:
+            sched.requests[plan.prefill_rid].output.append(0)
+        sched.complete_step(plan, now=t)
+        steps += 1
+
+    m = summarize(sched.requests.values(), horizon=max(t, 1e-9))
+    return ServiceResult(metrics=m, steps=steps, sim_time=t)
+
+
+# ---------------------------------------------------------------------------
+# SLO threshold + QPS search (paper methodology)
+# ---------------------------------------------------------------------------
+
+
+def slo_threshold(hw: Hardware, cfg: ModelConfig, chunk: int = 512) -> float:
+    """P99-TBT SLO: TBT in the reference condition — 32 concurrent decode
+    requests x 4K KV with a packed `chunk` prefill (paper: 16.70ms / 19.23ms)."""
+    r = simulate_stage(hw, cfg, chunk, [4096] * 32, "packed_prefetch")
+    return r.stage_time
+
+
+def qps_under_slo(
+    hw: Hardware,
+    cfg: ModelConfig,
+    workload: WorkloadSpec,
+    mode: str,
+    slo: float,
+    chunk: int = 512,
+    n_requests: int = 200,
+    sched_delay_slo: float = 1.0,
+    lo: float = 0.01,
+    hi: float = 64.0,
+    iters: int = 12,
+    seed: int = 0,
+    max_decode_batch: int = 32,
+) -> Tuple[float, Dict[str, float]]:
+    """Largest QPS whose P99 TBT <= slo and P99 scheduling delay <= 1s."""
+
+    def ok(qps: float) -> Tuple[bool, Dict[str, float]]:
+        r = simulate_service(
+            hw, cfg, workload, qps, mode, n_requests=n_requests, chunk=chunk,
+            seed=seed, max_decode_batch=max_decode_batch,
+        )
+        m = r.metrics
+        good = (
+            m["completed"] >= 0.95 * m["submitted"]
+            and m["tbt_p99"] <= slo
+            and m["sched_delay_p99"] <= sched_delay_slo
+        )
+        return good, m
+
+    good, m = ok(lo)
+    if not good:
+        return 0.0, m
+    best, best_m = lo, m
+    for _ in range(iters):
+        mid = (lo + hi) / 2.0
+        good, m = ok(mid)
+        if good:
+            best, best_m, lo = mid, m, mid
+        else:
+            hi = mid
+    return best, best_m

@@ -1,0 +1,56 @@
+"""Deterministic, shardable, resumable synthetic LM data pipeline.
+
+Every batch is a pure function of (seed, step, shard) — so restart/resume
+reproduces the exact token stream from the checkpointed cursor with no state
+files, and each data-parallel shard draws a disjoint slice. Tokens follow a
+noisy affine recurrence, giving structure a model can actually learn (loss
+decreases — asserted in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.05  # fraction of tokens replaced with noise
+    mult: int = 7
+    add: int = 13
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig, shard: int = 0, num_shards: int = 1):
+        assert cfg.global_batch % num_shards == 0
+        self.cfg = cfg
+        self.shard = shard
+        self.num_shards = num_shards
+        self.local_batch = cfg.global_batch // num_shards
+
+    def batch_at(self, step: int) -> dict:
+        """Batch for `step` (the resume cursor is just the step number)."""
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, self.shard])
+        )
+        B, S = self.local_batch, cfg.seq_len
+        start = rng.integers(0, cfg.vocab_size, (B, 1))
+        toks = np.empty((B, S), np.int64)
+        toks[:, 0] = start[:, 0]
+        for t in range(1, S):
+            toks[:, t] = (toks[:, t - 1] * cfg.mult + cfg.add) % cfg.vocab_size
+        noise_mask = rng.random((B, S)) < cfg.noise
+        noise_tok = rng.integers(0, cfg.vocab_size, (B, S))
+        toks = np.where(noise_mask, noise_tok, toks)
+        return {"tokens": toks.astype(np.int32)}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,25 @@
+"""Multi-device distributed tests (8 host devices, subprocess-isolated).
+
+XLA locks the device count at first init, so the checks run in a child
+process with XLA_FLAGS=--xla_force_host_platform_device_count=8. See
+tests/distributed_checks.py for the assertions.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_distributed_checks():
+    script = os.path.join(os.path.dirname(__file__), "distributed_checks.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, script], capture_output=True, text=True, timeout=850, env=env
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout[-3000:]}\nstderr:\n{r.stderr[-3000:]}"
+    assert "ALL OK" in r.stdout

@@ -1,0 +1,73 @@
+"""Blocked XLA flash attention == direct sdpa (the large-context model path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import _mask_bias, _sdpa
+from repro.models.flash_xla import flash_sdpa
+
+
+def rand(rng, shape):
+    return jax.random.normal(rng, shape, jnp.float32)
+
+
+@pytest.mark.parametrize("window", [None, 100])
+@pytest.mark.parametrize("T,S,off", [(256, 256, 0), (96, 320, 224), (64, 512, 100)])
+def test_flash_xla_matches_sdpa(T, S, off, window):
+    """off>0 emulates the cache path: queries at positions off..off+T-1."""
+    B, H, KV, d = 2, 8, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (B, T, H, d))
+    k = rand(ks[1], (B, S, KV, d))
+    v = rand(ks[2], (B, S, KV, d))
+    q_pos = off + jnp.arange(T)[None, :] + jnp.zeros((B, 1), jnp.int32)
+    scale = 1.0 / d**0.5
+
+    out = flash_sdpa(q, (k, v), q_pos, jnp.arange(S), scale=scale, window=window,
+                     block_q=64, block_k=64)
+    bias = _mask_bias(q_pos, jnp.arange(S), window)
+    expect = _sdpa(q, k, v, bias, scale, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_xla_softcap_noncausal():
+    B, T, S, H, d = 1, 128, 192, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = rand(ks[0], (B, T, H, d))
+    k = rand(ks[1], (B, S, H, d))
+    v = rand(ks[2], (B, S, H, d))
+    q_pos = jnp.zeros((B, T), jnp.int32)
+    out = flash_sdpa(q, (k, v), q_pos, jnp.arange(S), scale=0.25, softcap=30.0,
+                     causal=False, block_q=64, block_k=64)
+    from repro.models.layers import softcap as sc
+    s = sc(jnp.einsum("bthd,bshd->bhts", q, k) * 0.25, 30.0)
+    expect = jnp.einsum("bhts,bshd->bthd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_xla_mla_expand():
+    """kv_expand path: latent -> per-head K/V inside the block loop."""
+    B, T, H, L, nope, rope, vh = 1, 128, 4, 32, 16, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    ckv = rand(ks[0], (B, T, L))
+    krope = rand(ks[1], (B, T, rope))
+    q = rand(ks[2], (B, T, H, nope + rope))
+    w_up = rand(ks[3], (L, H, nope + vh)) * 0.1
+
+    def expand(ckv_b, krope_b):
+        kv_b = jnp.einsum("bsl,lhx->bshx", ckv_b, w_up)
+        k_b = jnp.concatenate(
+            [kv_b[..., :nope],
+             jnp.broadcast_to(krope_b[:, :, None, :], krope_b.shape[:2] + (H, rope))], -1)
+        return k_b, kv_b[..., nope:]
+
+    q_pos = jnp.arange(T)[None, :] + jnp.zeros((B, 1), jnp.int32)
+    out = flash_sdpa(q, (ckv, krope), q_pos, jnp.arange(T), scale=0.2,
+                     kv_expand=expand, block_q=32, block_k=32)
+    k_full, v_full = expand(ckv, krope)
+    bias = _mask_bias(q_pos, jnp.arange(T), None)
+    expect = _sdpa(q, k_full, v_full, bias, 0.2, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,225 @@
+"""Pallas kernel validation (interpret mode on CPU) against pure-jnp oracles.
+
+Shape/dtype sweeps + hypothesis property tests per kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.models.mamba import ssd_chunked
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def rand(rng, shape, dtype):
+    return jax.random.normal(rng, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,KV,S,d",
+    [
+        (1, 4, 4, 128, 64),  # MHA
+        (2, 8, 2, 256, 64),  # GQA 4x
+        (1, 4, 1, 128, 128),  # MQA
+        (1, 2, 2, 384, 32),  # non-pow2 seq (pad path), small head dim
+    ],
+)
+def test_flash_matches_ref(B, H, KV, S, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (B, S, H, d), dtype)
+    k = rand(ks[1], (B, S, KV, d), dtype)
+    v = rand(ks[2], (B, S, KV, d), dtype)
+    out = ops.flash_attention_bshd(q, k, v, interpret=True, block_q=128, block_k=128)
+    expect = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **TOL[dtype]
+    )
+
+
+@pytest.mark.parametrize("window", [None, 64, 128])
+@pytest.mark.parametrize("softcap", [None, 50.0])
+def test_flash_window_softcap(window, softcap):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, H, KV, S, d = 1, 4, 2, 256, 64
+    q = rand(ks[0], (B, S, H, d), jnp.float32)
+    k = rand(ks[1], (B, S, KV, d), jnp.float32)
+    v = rand(ks[2], (B, S, KV, d), jnp.float32)
+    out = ops.flash_attention_bshd(
+        q, k, v, window=window, softcap=softcap, interpret=True, block_q=64, block_k=64
+    )
+    expect = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        window=window, softcap=softcap,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, H, S, d = 1, 2, 128, 64
+    q = rand(ks[0], (B, S, H, d), jnp.float32)
+    k = rand(ks[1], (B, S, H, d), jnp.float32)
+    v = rand(ks[2], (B, S, H, d), jnp.float32)
+    out = ops.flash_attention_bshd(q, k, v, causal=False, interpret=True, block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), causal=False
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    seed=st.integers(0, 2**30),
+    scale=st.floats(0.1, 30.0),  # large scale stresses online-softmax stability
+)
+def test_flash_softmax_shift_invariance(seed, scale):
+    """Adding a constant to all logits (via scaled q) must keep outputs finite
+    and equal to the oracle — the online softmax is shift-stable."""
+    ks = jax.random.split(jax.random.PRNGKey(seed % (2**31 - 1)), 3)
+    B, H, S, d = 1, 2, 128, 32
+    q = rand(ks[0], (B, S, H, d), jnp.float32) * scale
+    k = rand(ks[1], (B, S, H, d), jnp.float32)
+    v = rand(ks[2], (B, S, H, d), jnp.float32)
+    out = ops.flash_attention_bshd(q, k, v, interpret=True, block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    ).transpose(0, 2, 1, 3)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,KV,S,d",
+    [(2, 8, 2, 512, 64), (1, 4, 4, 256, 128), (3, 4, 1, 1024, 64)],
+)
+def test_decode_matches_ref(B, H, KV, S, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = rand(ks[0], (B, 1, H, d), dtype)
+    k = rand(ks[1], (B, S, KV, d), dtype)
+    v = rand(ks[2], (B, S, KV, d), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+    out = ops.decode_attention_bhd(q, k, v, lengths, interpret=True, block_k=128)
+    G = H // KV
+    expect = ref.decode_attention_ref(
+        q[:, 0].reshape(B, KV, G, d), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), lengths
+    ).reshape(B, 1, H, d)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **TOL[dtype]
+    )
+
+
+@settings(deadline=None, max_examples=10)
+@given(data=st.data())
+def test_decode_respects_lengths(data):
+    """Property: KV contents beyond `length` must not influence the output."""
+    seed = data.draw(st.integers(0, 2**30))
+    B, H, KV, S, d = 2, 4, 2, 256, 32
+    length = data.draw(st.integers(1, S - 1))
+    ks = jax.random.split(jax.random.PRNGKey(seed % (2**31 - 1)), 4)
+    q = rand(ks[0], (B, 1, H, d), jnp.float32)
+    k = rand(ks[1], (B, S, KV, d), jnp.float32)
+    v = rand(ks[2], (B, S, KV, d), jnp.float32)
+    lengths = jnp.full((B,), length, jnp.int32)
+    out1 = ops.decode_attention_bhd(q, k, v, lengths, interpret=True, block_k=64)
+    # corrupt the tail
+    k2 = k.at[:, length:].set(999.0)
+    v2 = v.at[:, length:].set(-999.0)
+    out2 = ops.decode_attention_bhd(q, k2, v2, lengths, interpret=True, block_k=64)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6, atol=1e-6)
+
+
+def test_decode_window():
+    B, H, KV, S, d = 1, 4, 2, 256, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    q = rand(ks[0], (B, 1, H, d), jnp.float32)
+    k = rand(ks[1], (B, S, KV, d), jnp.float32)
+    v = rand(ks[2], (B, S, KV, d), jnp.float32)
+    lengths = jnp.array([200], jnp.int32)
+    out = ops.decode_attention_bhd(q, k, v, lengths, window=64, interpret=True, block_k=64)
+    expect = ref.decode_attention_ref(
+        q[:, 0].reshape(B, KV, H // KV, d), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        lengths, window=64,
+    ).reshape(B, 1, H, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba2)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,nh,hd,G,ds", [(1, 128, 4, 16, 1, 16), (2, 256, 8, 32, 2, 32)])
+def test_ssd_kernel_matches_sequential_ref(B, S, nh, hd, G, ds, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    x = rand(ks[0], (B, S, nh, hd), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))  # positive
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = rand(ks[3], (B, S, G, ds), dtype) * 0.5
+    Cm = rand(ks[0], (B, S, G, ds), dtype) * 0.5
+    y, hT = ops.ssd(x, dt, A, Bm, Cm, chunk=64, interpret=True)
+    y_ref, h_ref = ref.ssd_ref(x, dt, A, Bm, Cm)
+    tol = dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 else dict(rtol=4e-2, atol=4e-2)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(y_ref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(h_ref), rtol=1e-3, atol=1e-3)
+
+
+def test_model_ssd_chunked_matches_sequential_ref():
+    """The model's pure-jnp chunked SSD (used on the XLA path) is also exact."""
+    B, S, nh, hd, G, ds = 2, 192, 4, 16, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    x = rand(ks[0], (B, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = rand(ks[3], (B, S, G, ds), jnp.float32) * 0.5
+    Cm = rand(ks[0], (B, S, G, ds), jnp.float32) * 0.5
+    pad = (-S) % 64
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Bp = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Cp = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, hT = ssd_chunked(xp, dtp, A, Bp, Cp, chunk=64)
+    y_ref, _ = ref.ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y[:, :S]), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 2**30))
+def test_ssd_state_handoff(seed):
+    """Property: ssd(x[:half]) state fed as h0 to ssd(x[half:]) == ssd(x) —
+    the chunked-prefill handoff invariant."""
+    B, S, nh, hd, G, ds = 1, 128, 2, 16, 1, 8
+    half = 64
+    ks = jax.random.split(jax.random.PRNGKey(seed % (2**31 - 1)), 4)
+    x = rand(ks[0], (B, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = rand(ks[3], (B, S, G, ds), jnp.float32) * 0.5
+    Cm = rand(ks[0], (B, S, G, ds), jnp.float32) * 0.5
+    y_full, h_full = ops.ssd(x, dt, A, Bm, Cm, chunk=32, interpret=True)
+    y1, h1 = ops.ssd(x[:, :half], dt[:, :half], A, Bm[:, :half], Cm[:, :half],
+                     chunk=32, interpret=True)
+    y2, h2 = ops.ssd(x[:, half:], dt[:, half:], A, Bm[:, half:], Cm[:, half:],
+                     h0=h1, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y_full[:, :half]), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, half:]), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,134 @@
+"""Simulator validation: paper-anchor reproduction + mechanism properties."""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.sim.hardware import TPUV6E, TPUV7
+from repro.sim.stage import decode_latency, simulate_stage, stage_speedups
+from repro.sim.service import simulate_service, slo_threshold
+from repro.serving.workload import OPENCHAT_SHAREGPT4
+
+MB = 1024**2
+K = 1024
+CFG = get_config("llama3.1-8b")
+
+
+# ---------------------------------------------------------------------------
+# paper anchors (tolerances reflect the calibration residuals, see
+# benchmarks/calibration.json; every anchor within +/-16%)
+# ---------------------------------------------------------------------------
+
+
+def _dec_speedup(P, ctxs, mode, buf=None):
+    serial = simulate_stage(TPUV6E, CFG, P, ctxs, "serial")
+    d = decode_latency(TPUV6E, CFG, P, ctxs, mode, prefetch_buffer=buf)
+    return serial.decode_time / d
+
+
+def _ov_speedup(P, ctxs, mode, buf=None):
+    serial = simulate_stage(TPUV6E, CFG, P, ctxs, "serial")
+    r = simulate_stage(TPUV6E, CFG, P, ctxs, mode, prefetch_buffer=buf)
+    return serial.stage_time / r.stage_time
+
+
+PAPER_ANCHORS = [
+    # (fn, args, paper value, rel tolerance)
+    (_dec_speedup, (2048, [4 * K] * 32, "packed"), 1.41, 0.20),
+    (_dec_speedup, (2048, [4 * K] * 32, "packed_prefetch"), 8.06, 0.25),
+    (_ov_speedup, (512, [4 * K] * 4, "packed_prefetch"), 1.83, 0.15),
+    (_ov_speedup, (1024, [4 * K] * 4, "packed_prefetch"), 1.72, 0.20),
+    (_ov_speedup, (1024, [4 * K] * 4, "packed"), 1.20, 0.20),
+    (_dec_speedup, (2048, [4 * K] * 16, "packed_prefetch", 0.0), 1.73, 0.20),
+    (_dec_speedup, (2048, [4 * K] * 16, "packed_prefetch", 512 * MB), 6.49, 0.15),
+    (_ov_speedup, (2048, [4 * K] * 16, "packed_prefetch", 512 * MB), 1.35, 0.15),
+    (_ov_speedup, (1024, [4 * K] * 16, "packed_prefetch", 512 * MB), 1.68, 0.15),
+]
+
+
+@pytest.mark.parametrize("i", range(len(PAPER_ANCHORS)))
+def test_paper_anchor(i):
+    fn, args, want, tol = PAPER_ANCHORS[i]
+    got = fn(*args)
+    assert abs(got / want - 1.0) <= tol, f"anchor {i}: sim {got:.2f} vs paper {want} (tol {tol})"
+
+
+def test_paper_buffer_sizing():
+    """512MB = one layer's 128K-token KV — prefetch hit goes ~1 at that size."""
+    r = stage_speedups(TPUV6E, CFG, 2048, [4 * K] * 32, prefetch_buffer=512 * MB)
+    assert r["packed_prefetch"]["prefetch_hit"] > 0.95
+
+
+# ---------------------------------------------------------------------------
+# mechanism properties
+# ---------------------------------------------------------------------------
+
+
+def test_more_buffer_never_slower():
+    prev = None
+    for buf in (0, 64 * MB, 128 * MB, 256 * MB, 512 * MB):
+        t = simulate_stage(
+            TPUV6E, CFG, 1024, [4 * K] * 16, "packed_prefetch", prefetch_buffer=buf
+        ).stage_time
+        if prev is not None:
+            assert t <= prev * 1.0001, f"buffer {buf}: {t} > {prev}"
+        prev = t
+
+
+def test_longer_prefill_more_prefetch():
+    hits = [
+        simulate_stage(TPUV6E, CFG, P, [16 * K] * 8, "packed_prefetch").prefetch_hit
+        for P in (128, 512, 2048)
+    ]
+    assert hits[0] <= hits[1] <= hits[2] + 1e-9
+    assert hits[2] > hits[0]
+
+
+def test_packed_never_slower_than_serial():
+    for P in (512, 2048):
+        for ctxs in ([4 * K] * 4, [16 * K] * 8):
+            s = simulate_stage(TPUV6E, CFG, P, ctxs, "serial").stage_time
+            p = simulate_stage(TPUV6E, CFG, P, ctxs, "packed").stage_time
+            f = simulate_stage(TPUV6E, CFG, P, ctxs, "packed_prefetch").stage_time
+            assert f <= p <= s * 1.0001
+
+
+def test_hbm_traffic_reduced_by_packing():
+    s = simulate_stage(TPUV6E, CFG, 1024, [4 * K] * 8, "serial").hbm_bytes
+    p = simulate_stage(TPUV6E, CFG, 1024, [4 * K] * 8, "packed").hbm_bytes
+    assert p < s  # weight reuse removes the decode weight stream
+
+
+def test_attention_free_arch_prefetch_is_noop():
+    cfg = get_config("mamba2-2.7b")
+    a = simulate_stage(TPUV6E, cfg, 1024, [4 * K] * 8, "packed").stage_time
+    b = simulate_stage(TPUV6E, cfg, 1024, [4 * K] * 8, "packed_prefetch").stage_time
+    assert abs(a - b) / a < 1e-6  # no KV -> nothing to prefetch (DESIGN §4)
+    # but packing itself still helps vs serial
+    s = simulate_stage(TPUV6E, cfg, 1024, [4 * K] * 8, "serial").stage_time
+    assert b < s
+
+
+def test_slo_thresholds_order_of_magnitude():
+    slo8 = slo_threshold(TPUV6E, CFG)
+    slo70 = slo_threshold(TPUV7, get_config("llama3.1-70b"))
+    # paper: 16.70ms / 19.23ms — our absolute scale is within ~1.7x (documented)
+    assert 0.010 < slo8 < 0.035
+    assert 0.012 < slo70 < 0.045
+    assert slo70 > slo8
+
+
+def test_service_sim_runs_and_meters():
+    r = simulate_service(
+        TPUV6E, CFG, OPENCHAT_SHAREGPT4, qps=1.0, mode="packed_prefetch", n_requests=40
+    )
+    m = r.metrics
+    assert m["completed"] == 40
+    assert m["tbt_p99"] > 0 and m["ttft_p99"] > 0
+    # prefetch mode is never slower than packing-only at the same load
+    r2 = simulate_service(
+        TPUV6E, CFG, OPENCHAT_SHAREGPT4, qps=1.0, mode="packed", n_requests=40
+    )
+    assert m["tbt_p99"] <= r2.metrics["tbt_p99"] * 1.0001
