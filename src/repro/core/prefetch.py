@@ -19,7 +19,7 @@ cost model and is computed by ``repro.sim``; the planner reports the bytes it
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, Iterable, List, Sequence
 
 from repro.configs.base import ModelConfig
 
@@ -57,14 +57,21 @@ class PrefetchPlanner:
         self.buffer_bytes = int(buffer_bytes)
         self.kv_btl = model_cfg.kv_bytes_per_token_layer
 
-    def plan(self, ctx_lens: Dict[int, int]) -> PrefetchPlan:
-        """ctx_lens: {request id: KV tokens}. Longest-context-first fill."""
+    def plan(self, ctx_lens: Dict[int, int], finishing: Iterable[int] = ()) -> PrefetchPlan:
+        """ctx_lens: {request id: KV tokens}. Decode-request-first fill.
+
+        ``finishing`` names requests whose prefill completes this step: their
+        KV is still being written during the packed phase, so established
+        decodes get buffer residency first; within each class the fill is
+        longest-context-first (longest contexts are the most HBM-bound).
+        """
         if self.kv_btl == 0:  # attention-free arch: nothing to prefetch
             return PrefetchPlan(self.buffer_bytes, 0, {r: 0 for r in ctx_lens},
                                 sum(ctx_lens.values()))
         budget = self.buffer_bytes // self.kv_btl  # tokens that fit (one layer)
+        fin = set(finishing)
         resident: Dict[int, int] = {}
-        for rid in sorted(ctx_lens, key=lambda r: -ctx_lens[r]):
+        for rid in sorted(ctx_lens, key=lambda r: (r in fin, -ctx_lens[r])):
             take = min(ctx_lens[rid], budget)
             resident[rid] = take
             budget -= take

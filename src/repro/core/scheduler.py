@@ -6,24 +6,35 @@ executes StepPlans on a model, the simulator prices the same StepPlans with
 the hardware cost model. This guarantees the simulated results (paper Figs
 7/8) describe exactly the scheduling policy the runnable system implements.
 
-Policy (Sarathi-Serve style, as adopted by the paper):
+Policy (Sarathi-Serve style, as adopted by the paper, generalized to
+continuous batching over multiple prefills):
   * decode-first: every active decode request is scheduled each step;
   * chunked-prefill packing: the remaining token budget (chunk_size minus
-    decode tokens) is filled with the next prefill chunk — at most one
-    request is in prefill at a time (matching the paper's time diagram);
+    decode tokens) is filled with chunks from up to
+    ``max_concurrent_prefills`` requests — a short prompt no longer waits
+    behind a long one monopolizing the prefill lane;
+  * admission policies: ``fcfs`` (arrival order), ``sjf`` (shortest remaining
+    prefill first), ``priority`` (Request.priority desc, fcfs tie-break);
+  * KV-pressure preemption: when the optional ``kv_capacity_tokens`` budget
+    would be exceeded by the growing decode set, the lowest-priority /
+    youngest decode is preempted — its KV is dropped and it re-queues to
+    re-prefill prompt + generated output (recompute-style preemption, so
+    greedy outputs are bit-identical);
   * prefetch: each StepPlan carries a PrefetchPlan for the *next* attention
     op's KV (one-layer lookahead), built from the decode set's context
-    lengths and the on-chip prefetch-buffer capacity.
+    lengths plus every prefill finishing this step, and the on-chip
+    prefetch-buffer capacity.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.prefetch import PrefetchPlan, PrefetchPlanner
 from repro.serving.request import Request, State
+
+POLICIES = ("fcfs", "sjf", "priority")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,28 +42,73 @@ class SchedulerConfig:
     chunk_size: int = 512  # token budget per packed step
     max_decode_batch: int = 32  # concurrent decode slots
     prefetch_buffer_bytes: int = 512 * 1024 * 1024  # the M3D buffer (paper: 512MB)
+    max_concurrent_prefills: int = 1  # prefill requests packable into one step
+    policy: str = "fcfs"  # admission order: fcfs | sjf | priority
+    # total KV tokens the backing store holds across all active requests
+    # (None = unbounded). Exceeding it triggers decode preemption.
+    kv_capacity_tokens: Optional[int] = None
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}; want one of {POLICIES}")
+        if self.max_concurrent_prefills < 1:
+            raise ValueError("max_concurrent_prefills must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillSegment:
+    """One request's chunk within a packed step."""
+
+    rid: int
+    slot: int
+    start: int  # chunk token range [start, start+length) of the effective prompt
+    length: int
+    finishes: bool  # last chunk -> emits first token
 
 
 @dataclasses.dataclass
 class StepPlan:
-    """One packed execution cycle."""
+    """One packed execution cycle: all decodes + up to N prefill chunks."""
 
-    decode_slots: List[int]  # engine slots decoding this step
+    decode_slots: List[int]
     decode_rids: List[int]
-    prefill_rid: Optional[int]  # request whose chunk is packed in
-    prefill_start: int = 0  # chunk token range [start, start+len)
-    prefill_len: int = 0
-    prefill_slot: Optional[int] = None
-    prefill_finishes: bool = False  # last chunk -> emits first token
+    prefill_segments: List[PrefillSegment] = dataclasses.field(default_factory=list)
+    preempted_rids: List[int] = dataclasses.field(default_factory=list)
     prefetch: Optional[PrefetchPlan] = None
 
     @property
+    def total_prefill_tokens(self) -> int:
+        return sum(s.length for s in self.prefill_segments)
+
+    @property
     def total_tokens(self) -> int:
-        return len(self.decode_slots) + self.prefill_len
+        return len(self.decode_slots) + self.total_prefill_tokens
+
+    @property
+    def finishing_rids(self) -> List[int]:
+        return [s.rid for s in self.prefill_segments if s.finishes]
 
     @property
     def is_empty(self) -> bool:
         return self.total_tokens == 0
+
+
+@dataclasses.dataclass
+class SchedStats:
+    """Aggregate counters surfaced into service metrics."""
+
+    steps: int = 0
+    scheduled_tokens: int = 0  # decode + prefill tokens actually packed
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    preemptions: int = 0
+    preempted_tokens: int = 0  # KV tokens dropped (recompute debt)
+
+    def packing_efficiency(self, chunk_size: int) -> float:
+        """Scheduled tokens / chunk budget — 1.0 means every step was full."""
+        if self.steps == 0:
+            return float("nan")
+        return self.scheduled_tokens / (self.steps * chunk_size)
 
 
 class Scheduler:
@@ -60,11 +116,12 @@ class Scheduler:
         self.cfg = cfg
         self.model_cfg = model_cfg
         self.planner = PrefetchPlanner(model_cfg, cfg.prefetch_buffer_bytes)
-        self.waiting: Deque[Request] = deque()
+        self.waiting: List[Request] = []
         self.active: Dict[int, Request] = {}  # slot -> request (prefill or decode)
         self.free_slots: List[int] = list(range(cfg.max_decode_batch))
-        self.current_prefill: Optional[Request] = None
+        self.prefilling: List[Request] = []  # admission order
         self.requests: Dict[int, Request] = {}
+        self.stats = SchedStats()
 
     # ------------------------------------------------------------------ API
     def add_request(self, req: Request) -> None:
@@ -76,59 +133,128 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.active)
 
+    @property
+    def kv_in_use(self) -> int:
+        return sum(r.context_len for r in self.active.values())
+
+    def packing_efficiency(self) -> float:
+        return self.stats.packing_efficiency(self.cfg.chunk_size)
+
+    # -------------------------------------------------------------- policies
+    def _pop_waiting(self) -> Request:
+        """Remove and return the next request per the admission policy."""
+        if self.cfg.policy == "sjf":
+            key = lambda r: (r.total_prefill_len - r.prefill_pos, r.arrival_time, r.rid)
+        elif self.cfg.policy == "priority":
+            key = lambda r: (-r.priority, r.arrival_time, r.rid)
+        else:  # fcfs
+            key = lambda r: (r.arrival_time, r.rid)
+        best = min(self.waiting, key=key)
+        self.waiting.remove(best)
+        return best
+
+    def _preempt_victim(self, decodes: List[Request]) -> Request:
+        """Lowest priority first, then youngest (latest arrival, highest rid)."""
+        return min(decodes, key=lambda r: (r.priority, -r.arrival_time, -r.rid))
+
+    def _preempt(self, req: Request, plan: StepPlan) -> None:
+        self.stats.preemptions += 1
+        self.stats.preempted_tokens += req.context_len
+        req.preemptions += 1
+        plan.preempted_rids.append(req.rid)
+        del self.active[req.slot]
+        self.free_slots.append(req.slot)
+        self.free_slots.sort()
+        req.slot = None
+        # recompute-style preemption: KV is dropped; the generated output
+        # becomes part of the effective prompt and is re-prefilled later.
+        req.restart_output_len = len(req.output)
+        req.prefill_pos = 0
+        req.state = State.QUEUED
+        self.waiting.append(req)
+
+    # ----------------------------------------------------------------- steps
     def next_step(self, now: float = 0.0) -> Optional[StepPlan]:
         """Build the next packed step, mutating request bookkeeping."""
-        decode_slots, decode_rids = [], []
+        plan = StepPlan(decode_slots=[], decode_rids=[])
+
+        # KV-pressure preemption: each decode grows its context by one this
+        # step; shed the lowest-priority/youngest decodes until the projected
+        # KV fits. Never preempt the last remaining decode (no livelock).
+        if self.cfg.kv_capacity_tokens is not None:
+            while True:
+                decodes = [r for r in self.active.values() if r.state == State.DECODE]
+                projected = self.kv_in_use + len(decodes)
+                if projected <= self.cfg.kv_capacity_tokens or len(decodes) <= 1:
+                    break
+                self._preempt(self._preempt_victim(decodes), plan)
+
         for slot, req in sorted(self.active.items()):
             if req.state == State.DECODE:
-                decode_slots.append(slot)
-                decode_rids.append(req.rid)
+                plan.decode_slots.append(slot)
+                plan.decode_rids.append(req.rid)
 
-        budget = self.cfg.chunk_size - len(decode_slots)
+        budget = max(0, self.cfg.chunk_size - len(plan.decode_slots))
 
-        # continue / admit prefill
-        if self.current_prefill is None and self.waiting and self.free_slots and budget > 0:
-            req = self.waiting.popleft()
-            req.slot = self.free_slots.pop(0)
-            req.state = State.PREFILL
-            self.active[req.slot] = req
-            self.current_prefill = req
-
-        plan = StepPlan(decode_slots=decode_slots, decode_rids=decode_rids, prefill_rid=None)
-        pre = self.current_prefill
-        if pre is not None and budget > 0:
-            take = min(budget, pre.prompt_len - pre.prefill_pos)
-            plan.prefill_rid = pre.rid
-            plan.prefill_slot = pre.slot
-            plan.prefill_start = pre.prefill_pos
-            plan.prefill_len = take
-            plan.prefill_finishes = pre.prefill_pos + take >= pre.prompt_len
+        # multi-prefill packing: fill the budget with one chunk per in-flight
+        # prefill (admission order), admitting new requests whenever budget,
+        # a free slot, and a prefill lane remain.
+        scheduled: set = set()  # rids already given a segment this step
+        while budget > 0:
+            pre = next((r for r in self.prefilling if r.rid not in scheduled), None)
+            if pre is None:
+                if not (self.waiting and self.free_slots
+                        and len(self.prefilling) < self.cfg.max_concurrent_prefills):
+                    break
+                pre = self._pop_waiting()
+                pre.slot = self.free_slots.pop(0)
+                pre.state = State.PREFILL
+                self.active[pre.slot] = pre
+                self.prefilling.append(pre)
+            take = min(budget, pre.total_prefill_len - pre.prefill_pos)
+            plan.prefill_segments.append(PrefillSegment(
+                rid=pre.rid, slot=pre.slot, start=pre.prefill_pos, length=take,
+                finishes=pre.prefill_pos + take >= pre.total_prefill_len,
+            ))
             if pre.schedule_time is None:
                 pre.schedule_time = now
+            budget -= take
+            scheduled.add(pre.rid)
 
+        # preemption only fires with >= 2 decodes, of which >= 1 survives into
+        # the plan — so an empty plan implies no state changed this call.
         if plan.is_empty:
             return None
 
         # prefetch lookahead: the decode set whose attention follows this
-        # packed compute phase (current decodes + the request finishing prefill)
-        ctx = {r: self.requests[r].context_len for r in decode_rids}
-        if plan.prefill_finishes and plan.prefill_rid is not None:
-            ctx[plan.prefill_rid] = pre.prompt_len
-        plan.prefetch = self.planner.plan(ctx)
+        # packed compute phase (current decodes + every finishing prefill)
+        ctx = {r: self.requests[r].context_len for r in plan.decode_rids}
+        finishing = []
+        for seg in plan.prefill_segments:
+            if seg.finishes:
+                ctx[seg.rid] = self.requests[seg.rid].total_prefill_len
+                finishing.append(seg.rid)
+        plan.prefetch = self.planner.plan(ctx, finishing=finishing)
+
+        self.stats.steps += 1
+        self.stats.scheduled_tokens += plan.total_tokens
+        self.stats.decode_tokens += len(plan.decode_slots)
+        self.stats.prefill_tokens += plan.total_prefill_tokens
         return plan
 
     def complete_step(self, plan: StepPlan, now: float = 0.0) -> List[int]:
         """Advance request states after a step executed. Returns finished rids."""
         finished: List[int] = []
-        if plan.prefill_rid is not None:
-            req = self.requests[plan.prefill_rid]
-            req.prefill_pos += plan.prefill_len
-            if plan.prefill_finishes:
-                # last chunk computed the first output token
+        for seg in plan.prefill_segments:
+            req = self.requests[seg.rid]
+            req.prefill_pos += seg.length
+            if seg.finishes:
+                # last chunk computed the next output token
                 req.state = State.DECODE
-                req.first_token_time = now
+                self.prefilling.remove(req)
+                if req.first_token_time is None:
+                    req.first_token_time = now
                 req.token_times.append(now)
-                self.current_prefill = None
 
         for rid in plan.decode_rids:
             req = self.requests[rid]
@@ -136,9 +262,7 @@ class Scheduler:
 
         # completion by output length (engine appends tokens itself; the sim
         # counts). Engine calls note_token() before complete_step.
-        for rid in list(plan.decode_rids) + (
-            [plan.prefill_rid] if plan.prefill_finishes and plan.prefill_rid is not None else []
-        ):
+        for rid in list(plan.decode_rids) + plan.finishing_rids:
             req = self.requests[rid]
             if len(req.output) >= req.max_new_tokens:
                 req.state = State.DONE

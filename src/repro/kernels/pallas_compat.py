@@ -1,0 +1,11 @@
+"""Version-portable Pallas TPU symbols.
+
+jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+the kernels are written against the new name and this shim resolves it on
+either version. Extend here if further pallas-tpu surface drifts.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams

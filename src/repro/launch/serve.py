@@ -29,6 +29,11 @@ def main():
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--prefetch-mb", type=float, default=0.25)
+    ap.add_argument("--policy", choices=["fcfs", "sjf", "priority"], default="fcfs")
+    ap.add_argument("--max-prefills", type=int, default=1,
+                    help="prefill requests packable into one step")
+    ap.add_argument("--kv-capacity", type=int, default=None,
+                    help="total KV token budget; exceeding it preempts decodes")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -39,7 +44,9 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     eng = Engine(model, params, SchedulerConfig(
         chunk_size=args.chunk, max_decode_batch=args.max_batch,
-        prefetch_buffer_bytes=int(args.prefetch_mb * 2**20)),
+        prefetch_buffer_bytes=int(args.prefetch_mb * 2**20),
+        max_concurrent_prefills=args.max_prefills, policy=args.policy,
+        kv_capacity_tokens=args.kv_capacity),
         max_len=args.max_len)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
@@ -47,9 +54,13 @@ def main():
         eng.submit(Request(rid=rid, prompt=rng.integers(0, cfg.vocab_size, L).tolist(),
                            max_new_tokens=args.max_new))
     eng.run(max_steps=5000)
-    m = summarize(eng.scheduler.requests.values(), horizon=float(max(eng.steps_run, 1)))
+    m = summarize(eng.scheduler.requests.values(), horizon=float(max(eng.steps_run, 1)),
+                  sched_stats=eng.scheduler.stats, chunk_size=args.chunk)
     print(f"[launch.serve] mode={'packed' if eng.packed_mode else 'two_call'} "
-          f"steps={eng.steps_run} completed={m['completed']}/{m['submitted']} "
+          f"policy={args.policy} steps={eng.steps_run} "
+          f"completed={m['completed']}/{m['submitted']} "
+          f"pack_eff={m['packing_efficiency']:.2f} "
+          f"preemptions={int(m['preemptions'])} "
           f"prefetch_cov={np.mean(eng.prefetch_log):.2f}")
 
 

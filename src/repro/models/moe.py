@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.distributed.ctx import shard_act
+from repro.distributed.ctx import shard_act, shard_map as _shard_map
 from repro.models.layers import dense_init, ffn, ffn_init
 
 CAPACITY_FACTOR = 1.25
@@ -194,7 +194,7 @@ def _moe_apply_sharded(params, cfg: ModelConfig, x, mesh):
         aux = E * jnp.sum(me * ce_frac)
         return y.reshape(Bl, Tl, d), aux
 
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         body,
         mesh=mesh,
         in_specs=(specs_params, P(b_spec, None, None)),

@@ -1,11 +1,12 @@
 """Continuous-batching serving engine driven by the packing-prefetch scheduler.
 
 Two execution modes:
-  * packed   — one jitted ``packed_step`` per cycle: decode tokens + the
-    prefill chunk share every linear/FFN/MoE matmul (true packing). Used for
-    attention-family archs.
-  * two_call — decode batch call + prefill chunk call, for SSM/hybrid and
-    encoder-decoder archs whose mixers need contiguous per-segment scans.
+  * packed   — one jitted ``packed_step`` per cycle: decode tokens + every
+    packed prefill segment share every linear/FFN/MoE matmul (true packing).
+    Used for attention-family archs.
+  * two_call — decode batch call + one prefill call per packed segment, for
+    SSM/hybrid and encoder-decoder archs whose mixers need contiguous
+    per-segment scans.
 
 Either way the Scheduler (repro.core.scheduler) decides step composition and
 prefetch plans, so service-level behaviour (Figs 7/8) is policy-identical to
@@ -131,14 +132,18 @@ class Engine:
         for i, (slot, rid) in enumerate(zip(plan.decode_slots, plan.decode_rids)):
             req = sch.requests[rid]
             tokens[i] = req.output[-1]
-            positions[i] = req.prefill_pos + len(req.output) - 1
+            positions[i] = req.next_decode_pos
             slots[i] = slot
-        if plan.prefill_rid is not None:
-            req = sch.requests[plan.prefill_rid]
-            L = plan.prefill_len
-            tokens[nd : nd + L] = req.prompt[plan.prefill_start : plan.prefill_start + L]
-            positions[nd : nd + L] = np.arange(plan.prefill_start, plan.prefill_start + L)
-            slots[nd : nd + L] = plan.prefill_slot
+        row = nd
+        last_rows = {}  # rid -> row of its segment's last token (finishing only)
+        for seg in plan.prefill_segments:
+            req = sch.requests[seg.rid]
+            tokens[row : row + seg.length] = req.prefill_slice(seg.start, seg.length)
+            positions[row : row + seg.length] = np.arange(seg.start, seg.start + seg.length)
+            slots[row : row + seg.length] = seg.slot
+            if seg.finishes:
+                last_rows[seg.rid] = row + seg.length - 1
+            row += seg.length
 
         logits, self.cache = self._packed(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(slots),
@@ -147,9 +152,8 @@ class Engine:
         logits = np.asarray(logits)
         for i, rid in enumerate(plan.decode_rids):
             self._append(sch.requests[rid], self._sample(logits[i]))
-        if plan.prefill_rid is not None and plan.prefill_finishes:
-            row = nd + plan.prefill_len - 1
-            self._append(sch.requests[plan.prefill_rid], self._sample(logits[row]))
+        for rid, r in last_rows.items():
+            self._append(sch.requests[rid], self._sample(logits[r]))
 
     # -------------------------------------------------------------- two-call
     def _run_two_call(self, plan: StepPlan) -> None:
@@ -162,7 +166,7 @@ class Engine:
             for slot, rid in zip(plan.decode_slots, plan.decode_rids):
                 req = sch.requests[rid]
                 tokens[slot, 0] = req.output[-1]
-                index[slot] = req.prefill_pos + len(req.output) - 1
+                index[slot] = req.next_decode_pos
                 mask[slot] = True
             logits, new_cache = self._decode(
                 self.params, jnp.asarray(tokens), self.cache, jnp.asarray(index)
@@ -176,11 +180,12 @@ class Engine:
             for slot, rid in zip(plan.decode_slots, plan.decode_rids):
                 self._append(sch.requests[rid], self._sample(logits[slot]))
 
-        if plan.prefill_rid is not None:
-            req = sch.requests[plan.prefill_rid]
-            slot = plan.prefill_slot
-            if plan.prefill_start == 0:
-                # slot reuse: SSM/conv states are additive — reset the row
+        for seg in plan.prefill_segments:
+            req = sch.requests[seg.rid]
+            slot = seg.slot
+            if seg.start == 0:
+                # slot reuse / re-prefill after preemption: SSM/conv states
+                # are additive — reset the row
                 self.cache = {
                     k: _put_slot(
                         self.cache[k],
@@ -195,7 +200,7 @@ class Engine:
                     )
                     for k in self.cache
                 }
-            chunk = req.prompt[plan.prefill_start : plan.prefill_start + plan.prefill_len]
+            chunk = req.prefill_slice(seg.start, seg.length)
             batch = {"tokens": jnp.asarray(np.asarray(chunk, np.int32)[None])}
             if self.cfg.encdec:
                 batch["frames"] = (
@@ -207,10 +212,10 @@ class Engine:
                 k: _take_slot(self.cache[k], slot, _batch_axis(k)) for k in self.cache
             }
             logits, sub = self._prefill(
-                self.params, batch, sub, jnp.int32(plan.prefill_start)
+                self.params, batch, sub, jnp.int32(seg.start)
             )
             self.cache = {
                 k: _put_slot(self.cache[k], sub[k], slot, _batch_axis(k)) for k in self.cache
             }
-            if plan.prefill_finishes:
+            if seg.finishes:
                 self._append(req, self._sample(np.asarray(logits)[0]))

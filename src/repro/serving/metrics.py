@@ -1,7 +1,7 @@
 """Service-level metrics: TTFT / TBT percentiles, scheduling delay, QPS."""
 from __future__ import annotations
 
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -14,7 +14,11 @@ def percentile(xs: List[float], p: float) -> float:
     return float(np.percentile(np.asarray(xs), p))
 
 
-def summarize(requests: Iterable[Request], horizon: float) -> Dict[str, float]:
+def summarize(requests: Iterable[Request], horizon: float,
+              sched_stats=None, chunk_size: Optional[int] = None) -> Dict[str, float]:
+    """Aggregate request-level latency metrics; when the scheduler's
+    ``SchedStats`` (and its chunk size) are passed, also surface scheduler
+    health: preemption counts, recompute debt, and packing efficiency."""
     reqs = [r for r in requests]
     done = [r for r in reqs if r.finish_time is not None]
     ttft = [r.first_token_time - r.arrival_time for r in done if r.first_token_time is not None]
@@ -23,7 +27,7 @@ def summarize(requests: Iterable[Request], horizon: float) -> Dict[str, float]:
     for r in done:
         tbt.extend(r.tbt_latencies())
     out_tokens = sum(len(r.output) for r in reqs)
-    return {
+    m = {
         "completed": len(done),
         "submitted": len(reqs),
         "qps_completed": len(done) / horizon if horizon > 0 else float("nan"),
@@ -33,4 +37,12 @@ def summarize(requests: Iterable[Request], horizon: float) -> Dict[str, float]:
         "tbt_p50": percentile(tbt, 50),
         "tbt_p99": percentile(tbt, 99),
         "sched_delay_p99": percentile(sched, 99),
+        "preempted_requests": float(sum(1 for r in reqs if r.preemptions > 0)),
     }
+    if sched_stats is not None:
+        m["preemptions"] = float(sched_stats.preemptions)
+        m["preempted_tokens"] = float(sched_stats.preempted_tokens)
+        m["steps"] = float(sched_stats.steps)
+        if chunk_size is not None:
+            m["packing_efficiency"] = sched_stats.packing_efficiency(chunk_size)
+    return m

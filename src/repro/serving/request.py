@@ -19,12 +19,18 @@ class Request:
     prompt: List[int]  # token ids (engine) — sim only uses len(prompt)
     max_new_tokens: int
     arrival_time: float = 0.0
+    priority: int = 0  # higher = more important (admission + preemption victim order)
     frames: Optional[Any] = None  # audio frontend stub embeddings (enc-dec archs)
 
     state: State = State.QUEUED
     slot: Optional[int] = None
-    prefill_pos: int = 0  # prompt tokens already prefilled
+    prefill_pos: int = 0  # effective-prompt tokens already prefilled
     output: List[int] = dataclasses.field(default_factory=list)
+
+    # preemption bookkeeping: a preempted decode drops its KV and re-prefills
+    # its *effective prompt* = prompt + the output tokens generated so far.
+    restart_output_len: int = 0  # output tokens baked into the current prefill
+    preemptions: int = 0  # times this request was preempted
 
     # timing (engine: wall clock; sim: simulated seconds)
     schedule_time: Optional[float] = None  # first time any chunk ran
@@ -37,13 +43,32 @@ class Request:
         return len(self.prompt)
 
     @property
+    def total_prefill_len(self) -> int:
+        """Length of the effective prompt: original prompt plus any output
+        tokens that must be recomputed after a preemption."""
+        return len(self.prompt) + self.restart_output_len
+
+    @property
     def context_len(self) -> int:
         """Tokens currently in this request's KV cache."""
-        return self.prefill_pos + len(self.output)
+        return self.prefill_pos + max(0, len(self.output) - self.restart_output_len)
 
     @property
     def prefill_done(self) -> bool:
-        return self.prefill_pos >= self.prompt_len
+        return self.prefill_pos >= self.total_prefill_len
+
+    @property
+    def next_decode_pos(self) -> int:
+        """Cache position at which the next decode step writes its KV (the
+        position of the last sampled token, not yet in the cache)."""
+        return self.prefill_pos + len(self.output) - self.restart_output_len - 1
+
+    def prefill_slice(self, start: int, length: int) -> List[int]:
+        """Token ids [start, start+length) of the effective prompt."""
+        if self.restart_output_len == 0:
+            return self.prompt[start : start + length]
+        seq = self.prompt + self.output[: self.restart_output_len]
+        return seq[start : start + length]
 
     def tbt_latencies(self) -> List[float]:
         """Time-between-tokens samples (decode-phase inter-token gaps)."""

@@ -66,6 +66,9 @@ def simulate_service(
     prefetch_buffer: Optional[float] = None,
     seed: int = 0,
     max_steps: int = 2_000_000,
+    max_concurrent_prefills: int = 1,
+    policy: str = "fcfs",
+    kv_capacity_tokens: Optional[int] = None,
 ) -> ServiceResult:
     buffer_bytes = hw.prefetch_buffer if prefetch_buffer is None else prefetch_buffer
     if mode == "packed":
@@ -73,7 +76,9 @@ def simulate_service(
     reqs = sample_requests(workload, n_requests, qps, seed=seed)
     sched = Scheduler(
         SchedulerConfig(chunk_size=chunk, max_decode_batch=max_decode_batch,
-                        prefetch_buffer_bytes=int(buffer_bytes)),
+                        prefetch_buffer_bytes=int(buffer_bytes),
+                        max_concurrent_prefills=max_concurrent_prefills,
+                        policy=policy, kv_capacity_tokens=kv_capacity_tokens),
         cfg,
     )
     costs = _StageCostCache(hw, cfg, mode, buffer_bytes)
@@ -91,20 +96,23 @@ def simulate_service(
                 break
             t = max(t, reqs[ai].arrival_time)
             continue
-        # price the step
+        # price the step: total prefill tokens at the deepest segment context
+        # (attention cost is dominated by the longest-context chunk)
         kv_d = sum(sched.requests[r].context_len for r in plan.decode_rids)
-        prefill_ctx = plan.prefill_start + plan.prefill_len
-        dt = costs.cost(plan.prefill_len, prefill_ctx, len(plan.decode_rids), kv_d)
+        prefill_ctx = max((s.start + s.length for s in plan.prefill_segments), default=0)
+        dt = costs.cost(plan.total_prefill_tokens, prefill_ctx,
+                        len(plan.decode_rids), kv_d)
         t += dt
         # emit tokens
         for rid in plan.decode_rids:
             sched.requests[rid].output.append(0)
-        if plan.prefill_finishes and plan.prefill_rid is not None:
-            sched.requests[plan.prefill_rid].output.append(0)
+        for rid in plan.finishing_rids:
+            sched.requests[rid].output.append(0)
         sched.complete_step(plan, now=t)
         steps += 1
 
-    m = summarize(sched.requests.values(), horizon=max(t, 1e-9))
+    m = summarize(sched.requests.values(), horizon=max(t, 1e-9),
+                  sched_stats=sched.stats, chunk_size=chunk)
     return ServiceResult(metrics=m, steps=steps, sim_time=t)
 
 
@@ -134,13 +142,17 @@ def qps_under_slo(
     iters: int = 12,
     seed: int = 0,
     max_decode_batch: int = 32,
+    **sched_kwargs,
 ) -> Tuple[float, Dict[str, float]]:
-    """Largest QPS whose P99 TBT <= slo and P99 scheduling delay <= 1s."""
+    """Largest QPS whose P99 TBT <= slo and P99 scheduling delay <= 1s.
+
+    Extra keyword args (``max_concurrent_prefills``, ``policy``,
+    ``kv_capacity_tokens``) pass through to ``simulate_service``."""
 
     def ok(qps: float) -> Tuple[bool, Dict[str, float]]:
         r = simulate_service(
             hw, cfg, workload, qps, mode, n_requests=n_requests, chunk=chunk,
-            seed=seed, max_decode_batch=max_decode_batch,
+            seed=seed, max_decode_batch=max_decode_batch, **sched_kwargs,
         )
         m = r.metrics
         good = (

@@ -99,6 +99,97 @@ def test_engine_matches_serial(arch):
         )
 
 
+MULTI_PREFILL_ARCHS = [
+    "llama3.1-8b",   # packed path: N segments in one packed_step call
+    "mamba2-2.7b",   # two-call path: one prefill call per segment
+]
+
+
+@pytest.mark.parametrize("arch", MULTI_PREFILL_ARCHS)
+def test_engine_multi_prefill_matches_serial(arch):
+    """Packing several prefill chunks into one step must not change tokens."""
+    cfg = dropless(reduce_config(get_config(arch)))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = make_requests(cfg, jax.random.PRNGKey(43), n=4)
+    expected = {r.rid: serial_reference(model, params, r) for r in reqs}
+
+    eng = Engine(
+        model, params,
+        SchedulerConfig(chunk_size=16, max_decode_batch=4,
+                        prefetch_buffer_bytes=1 << 20, max_concurrent_prefills=3),
+        max_len=MAX_LEN,
+    )
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                           max_new_tokens=r.max_new_tokens, frames=r.frames))
+    eng.run(max_steps=500)
+
+    for r in reqs:
+        got = eng.scheduler.requests[r.rid].output
+        assert got == expected[r.rid], (
+            f"{arch} rid={r.rid}: multi-prefill {got} != serial {expected[r.rid]}"
+        )
+
+
+@pytest.mark.parametrize("arch", MULTI_PREFILL_ARCHS)
+def test_engine_preemption_matches_serial(arch):
+    """KV-pressure preemption (drop KV, re-prefill prompt + output) must keep
+    greedy outputs token-identical to the serial reference."""
+    cfg = dropless(reduce_config(get_config(arch)))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = make_requests(cfg, jax.random.PRNGKey(44), n=3)
+    expected = {r.rid: serial_reference(model, params, r) for r in reqs}
+
+    # tiny KV budget so growing decode sets trigger preemption
+    eng = Engine(
+        model, params,
+        SchedulerConfig(chunk_size=16, max_decode_batch=3,
+                        prefetch_buffer_bytes=1 << 20, max_concurrent_prefills=2,
+                        kv_capacity_tokens=30),
+        max_len=MAX_LEN,
+    )
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                           max_new_tokens=r.max_new_tokens, frames=r.frames))
+    eng.run(max_steps=500)
+
+    assert eng.scheduler.stats.preemptions > 0, "KV pressure never triggered"
+    for r in reqs:
+        got = eng.scheduler.requests[r.rid].output
+        assert got == expected[r.rid], (
+            f"{arch} rid={r.rid}: preempted {got} != serial {expected[r.rid]}"
+        )
+
+
+def test_engine_multi_prefill_actually_packs():
+    """With several short prompts and budget headroom, at least one step
+    carries more than one prefill segment."""
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(
+        model, params,
+        SchedulerConfig(chunk_size=24, max_decode_batch=4,
+                        prefetch_buffer_bytes=1 << 20, max_concurrent_prefills=4),
+        max_len=MAX_LEN,
+    )
+    rng = jax.random.PRNGKey(7)
+    for i in range(4):
+        prompt = np.asarray(
+            jax.random.randint(jax.random.fold_in(rng, i), (6,), 0, cfg.vocab_size)
+        ).tolist()
+        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=2))
+    seg_counts = []
+    while eng.scheduler.has_work and eng.steps_run < 100:
+        plan = eng.step(now=float(eng.steps_run))
+        if plan is None:
+            break
+        seg_counts.append(len(plan.prefill_segments))
+    assert max(seg_counts) > 1, f"never packed multiple prefills: {seg_counts}"
+
+
 def test_engine_prefetch_log():
     """Prefetch plans are emitted and coverage is in [0, 1]."""
     cfg = reduce_config(get_config("llama3.1-8b"))
