@@ -3,31 +3,57 @@
 Decode + overall speedups vs serial for buffer {0..512MB} x prefill {512,
 1024, 2048}. Paper anchors: decode 1.73x (0MB) -> 6.49x (512MB); overall
 1.35x @2048 / 1.68x @1024 at 512MB.
+
+The ``fig6tier`` section sweeps the same BEOL capacities through the
+service-level tier model (block-granular residency, earned fills): the
+paper's capacity-vs-latency curve — P50/P99 TBT and BEOL hit-rate vs
+buffer size at a fixed load.
 """
 from __future__ import annotations
 
 from repro.configs import get_config
+from repro.serving.workload import OPENCHAT_SHAREGPT4
 from repro.sim.hardware import TPUV6E
+from repro.sim.service import simulate_service
 from repro.sim.stage import decode_latency, simulate_stage
 
 K = 1024
 MB = 1024**2
 
+BUFFERS = (0, 64 * MB, 128 * MB, 256 * MB, 384 * MB, 512 * MB)
 
-def run(print_fn=print):
+
+def run(print_fn=print, fast: bool = False):
     cfg = get_config("llama3.1-8b")
     hw = TPUV6E
     ctxs = [4 * K] * 16  # 64K decode KV
     print_fn("fig6,prefill,buffer_mb,decode_speedup,overall_speedup")
     for P in (512, 1024, 2048):
         serial = simulate_stage(hw, cfg, P, ctxs, "serial")
-        for buf in (0, 64 * MB, 128 * MB, 256 * MB, 384 * MB, 512 * MB):
+        for buf in BUFFERS:
             r = simulate_stage(hw, cfg, P, ctxs, "packed_prefetch", prefetch_buffer=buf)
             dec = serial.decode_time / decode_latency(
                 hw, cfg, P, ctxs, "packed_prefetch", prefetch_buffer=buf
             )
             ov = serial.stage_time / r.stage_time
             print_fn(f"fig6,{P},{buf//MB},{dec:.2f},{ov:.2f}")
+
+    # capacity-vs-latency through the tier model (service level)
+    n_req = 20 if fast else 40
+    print_fn("fig6tier,buffer_mb,tier_hit,tbt_p50_ms,tbt_p99_ms,hbm_tb_moved")
+    for buf in BUFFERS:
+        r = simulate_service(
+            hw, cfg, OPENCHAT_SHAREGPT4, qps=2.0, mode="packed_prefetch",
+            n_requests=n_req, max_decode_batch=16, prefetch_buffer=float(buf),
+            kv_block_size=16,
+        )
+        m = r.metrics
+        hit = m["tier_hit_rate"]
+        print_fn(
+            f"fig6tier,{buf//MB},{0.0 if hit != hit else hit:.3f},"
+            f"{m['tbt_p50']*1e3:.2f},{m['tbt_p99']*1e3:.2f},"
+            f"{m['hbm_bytes_moved']/1e12:.2f}"
+        )
     return True
 
 

@@ -6,7 +6,11 @@ the paper's reference condition (32 decodes x 4K KV), per the paper's method.
 
 Also reports packing efficiency (scheduled tokens / chunk budget) per
 scheduler policy and prefill-concurrency level on the Table II workloads —
-multi-prefill packing must never pack worse than the single-prefill baseline.
+multi-prefill packing must never pack worse than the single-prefill baseline
+(``fig7pack`` rows, now with tier hit-rate + HBM bytes moved) — and a
+swap-vs-recompute preemption comparison under KV pressure (``fig7mem``
+rows: tier hit-rate, swap traffic, HBM bytes moved/saved; swap must move
+strictly fewer HBM bytes than recompute at the same pressure).
 """
 from __future__ import annotations
 
@@ -51,9 +55,11 @@ POLICY_GRID = [  # (label, policy, max_concurrent_prefills)
 
 
 def packing_efficiency_report(print_fn=print, fast: bool = False):
-    """Packing efficiency per policy at a fixed load on Table II workloads."""
+    """Packing efficiency + tier stats per policy at a fixed load on the
+    Table II workloads."""
     n_req = 40 if fast else 100
-    print_fn("fig7pack,model,dataset,policy,prefills,pack_eff,preemptions,tbt_p99_ms")
+    print_fn("fig7pack,model,dataset,policy,prefills,pack_eff,preemptions,"
+             "tbt_p99_ms,tier_hit,hbm_tb_moved")
     results = {}
     for arch, hw in SETUPS:
         cfg = get_config(arch)
@@ -64,14 +70,53 @@ def packing_efficiency_report(print_fn=print, fast: bool = False):
                 r = simulate_service(
                     hw, cfg, wl, qps=4.0, mode="packed_prefetch",
                     n_requests=n_req, policy=policy, max_concurrent_prefills=n_pf,
+                    kv_block_size=16,
                 )
                 m = r.metrics
                 results[(arch, wl.name, label)] = m["packing_efficiency"]
                 print_fn(
                     f"fig7pack,{arch},{wl.name},{policy},{n_pf},"
                     f"{m['packing_efficiency']:.4f},{int(m['preemptions'])},"
-                    f"{m['tbt_p99']*1e3:.2f}"
+                    f"{m['tbt_p99']*1e3:.2f},{m['tier_hit_rate']:.3f},"
+                    f"{m['hbm_bytes_moved']/1e12:.2f}"
                 )
+    return results
+
+
+PREEMPTION_GRID = [  # (preemption mode, admission policy)
+    ("recompute", "fcfs"),
+    ("swap", "fcfs"),
+    ("swap", "sjf"),
+]
+
+
+def preemption_report(print_fn=print, fast: bool = False):
+    """Swap vs recompute preemption under KV pressure: tier hit-rate, swap
+    traffic, and total HBM bytes moved per mode (acceptance: swap moves
+    strictly fewer HBM bytes than recompute at the same pressure)."""
+    n_req = 24 if fast else 60
+    cfg = get_config("llama3.1-8b")
+    hw = TPUV6E
+    print_fn("fig7mem,model,dataset,preemption,policy,preemptions,swaps,"
+             "tier_hit,swap_gb,hbm_tb_moved,hbm_tb_saved,tbt_p99_ms")
+    results = {}
+    for wl in (OPENCHAT_SHAREGPT4,):
+        for pre, policy in PREEMPTION_GRID:
+            r = simulate_service(
+                hw, cfg, wl, qps=2.0, mode="packed_prefetch",
+                n_requests=n_req, kv_capacity_tokens=16_000,
+                max_decode_batch=16, max_concurrent_prefills=2,
+                preemption=pre, policy=policy, kv_block_size=16,
+            )
+            m = r.metrics
+            results[(wl.name, pre, policy)] = m
+            print_fn(
+                f"fig7mem,llama3.1-8b,{wl.name},{pre},{policy},"
+                f"{int(m['preemptions'])},{int(m['swap_outs'])},"
+                f"{m['tier_hit_rate']:.3f},{m['swapped_bytes']/1e9:.2f},"
+                f"{m['hbm_bytes_moved']/1e12:.2f},{m['hbm_bytes_saved']/1e12:.2f},"
+                f"{m['tbt_p99']*1e3:.2f}"
+            )
     return results
 
 
@@ -95,6 +140,7 @@ def run(print_fn=print, fast: bool = False):
                 f"{ratio:.2f},{paper},{bw:.2f}"
             )
     packing_efficiency_report(print_fn, fast=fast)
+    preemption_report(print_fn, fast=fast)
     return True
 
 

@@ -22,7 +22,7 @@ def main() -> None:
 
     sections = [
         ("fig5", lambda: fig5_stage_latency.run()),
-        ("fig6", lambda: fig6_memory_sweep.run()),
+        ("fig6", lambda: fig6_memory_sweep.run(fast=args.fast)),
         ("fig7", lambda: fig7_service_throughput.run(fast=args.fast)),
         ("fig8", lambda: fig8_chunk_tradeoff.run(fast=args.fast)),
         ("kernels", lambda: kernels_micro.run()),

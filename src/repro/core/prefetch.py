@@ -11,17 +11,30 @@ is compared against a single layer's KV for the packed decode batch:
 Residency is allocated decode-request-first, longest-context-first (longest
 contexts are the most HBM-bound — they benefit most per byte).
 
-The temporal half (is there enough residual HBM bandwidth during the packed
-compute-bound phase to actually fill the buffer?) depends on the hardware
-cost model and is computed by ``repro.sim``; the planner reports the bytes it
-*wants* moved, the sim reports the bytes that *can* move.
+Two modes:
+  * legacy (no memory manager): token-granular longest-first fill — the
+    PR 1 byte heuristic, kept for direct construction in tests;
+  * tier-aware (``mem`` passed): residency is block-granular and delegated
+    to the tier manager's placement policy. Blocks already resident in the
+    BEOL tier from earlier steps are *retained* (no HBM crossing); only the
+    delta is a fill the transfer engine must earn out of residual
+    bandwidth (temporal condition (2)).
+
+Finishing prefills are priced explicitly: their KV is still being written
+during this packed phase, so their resident bytes are NOT streamable fills —
+they appear in ``finishing_bytes`` and only become fillable next step. For
+attention-free architectures the next attention op needs zero bytes, so the
+plan reports ``total_tokens == 0`` and full (vacuous) coverage rather than
+pretending the SSM state is unprefetched KV.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Sequence
+from typing import Dict, Iterable, Optional
 
 from repro.configs.base import ModelConfig
+from repro.memory.manager import KVMemoryManager
+from repro.memory.tiers import Placement
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +46,13 @@ class PrefetchPlan:
     # per decode request: tokens of its KV (one layer) resident on-chip
     resident_tokens: Dict[int, int]
     total_tokens: int
+    # tokens of ``resident_tokens`` that belong to finishing prefills — their
+    # KV is written during this step, so it cannot be streamed as a fill
+    finishing_tokens: int = 0
+    # bytes already resident in the BEOL tier from earlier steps (hits)
+    retained_bytes: int = 0
+    # tier placement backing this plan (tier-aware mode only)
+    placement: Optional[Placement] = None
 
     @property
     def resident_total(self) -> int:
@@ -40,24 +60,39 @@ class PrefetchPlan:
 
     @property
     def coverage(self) -> float:
-        """Fraction of the next attention op's KV bytes already on-chip."""
+        """Fraction of the next attention op's KV bytes already on-chip.
+        1.0 when nothing is needed (empty decode set / attention-free)."""
         if self.total_tokens == 0:
             return 1.0
         return self.resident_total / self.total_tokens
 
     @property
     def prefetch_bytes(self) -> int:
-        """Bytes the schedule wants streamed during the compute-bound phase."""
+        """Bytes the schedule wants resident for the next attention op."""
         return self.resident_total * self.kv_bytes_per_token_layer
+
+    @property
+    def finishing_bytes(self) -> int:
+        """Resident bytes being written this step (not streamable as fills)."""
+        return self.finishing_tokens * self.kv_bytes_per_token_layer
+
+    @property
+    def fill_bytes(self) -> int:
+        """Bytes that must actually cross HBM->BEOL during the compute-bound
+        phase: wanted minus already-resident minus still-being-written."""
+        return max(0, self.prefetch_bytes - self.retained_bytes - self.finishing_bytes)
 
 
 class PrefetchPlanner:
-    def __init__(self, model_cfg: ModelConfig, buffer_bytes: int):
+    def __init__(self, model_cfg: ModelConfig, buffer_bytes: int,
+                 mem: Optional[KVMemoryManager] = None):
         self.cfg = model_cfg
         self.buffer_bytes = int(buffer_bytes)
         self.kv_btl = model_cfg.kv_bytes_per_token_layer
+        self.mem = mem
 
-    def plan(self, ctx_lens: Dict[int, int], finishing: Iterable[int] = ()) -> PrefetchPlan:
+    def plan(self, ctx_lens: Dict[int, int], finishing: Iterable[int] = (),
+             priorities: Optional[Dict[int, int]] = None) -> PrefetchPlan:
         """ctx_lens: {request id: KV tokens}. Decode-request-first fill.
 
         ``finishing`` names requests whose prefill completes this step: their
@@ -65,16 +100,41 @@ class PrefetchPlanner:
         decodes get buffer residency first; within each class the fill is
         longest-context-first (longest contexts are the most HBM-bound).
         """
+        fin = set(finishing)
         if self.kv_btl == 0:  # attention-free arch: nothing to prefetch
             return PrefetchPlan(self.buffer_bytes, 0, {r: 0 for r in ctx_lens},
-                                sum(ctx_lens.values()))
+                                total_tokens=0)
+        if self.mem is not None and self.mem.tiers.capacity_bytes > 0:
+            return self._plan_tiered(ctx_lens, fin, priorities)
         budget = self.buffer_bytes // self.kv_btl  # tokens that fit (one layer)
-        fin = set(finishing)
         resident: Dict[int, int] = {}
         for rid in sorted(ctx_lens, key=lambda r: (r in fin, -ctx_lens[r])):
             take = min(ctx_lens[rid], budget)
             resident[rid] = take
             budget -= take
         return PrefetchPlan(
-            self.buffer_bytes, self.kv_btl, resident, sum(ctx_lens.values())
+            self.buffer_bytes, self.kv_btl, resident, sum(ctx_lens.values()),
+            finishing_tokens=sum(resident[r] for r in fin if r in resident),
+        )
+
+    def _plan_tiered(self, ctx_lens: Dict[int, int], fin: set,
+                     priorities: Optional[Dict[int, int]]) -> PrefetchPlan:
+        """Block-granular residency over the BEOL tier's placement policy."""
+        mem = self.mem
+        placement = mem.place_beol(ctx_lens, finishing=fin, priorities=priorities)
+        bs = mem.block_size
+        resident = {
+            r: min(ctx_lens[r], placement.desired_blocks.get(r, 0) * bs)
+            for r in ctx_lens
+        }
+        retained_tok = {
+            r: min(resident[r], placement.retained_blocks.get(r, 0) * bs)
+            for r in ctx_lens
+        }
+        return PrefetchPlan(
+            self.buffer_bytes, self.kv_btl, resident, sum(ctx_lens.values()),
+            finishing_tokens=sum(resident[r] for r in fin if r in resident),
+            retained_bytes=sum(retained_tok[r] for r in ctx_lens if r not in fin)
+            * self.kv_btl,
+            placement=placement,
         )

@@ -15,15 +15,20 @@ continuous batching over multiple prefills):
     behind a long one monopolizing the prefill lane;
   * admission policies: ``fcfs`` (arrival order), ``sjf`` (shortest remaining
     prefill first), ``priority`` (Request.priority desc, fcfs tie-break);
-  * KV-pressure preemption: when the optional ``kv_capacity_tokens`` budget
-    would be exceeded by the growing decode set, the lowest-priority /
-    youngest decode is preempted — its KV is dropped and it re-queues to
-    re-prefill prompt + generated output (recompute-style preemption, so
-    greedy outputs are bit-identical);
+  * KV-pressure preemption: KV occupancy lives in a paged block allocator
+    (repro.memory) — when this step's decode growth would exceed the
+    capacity budget, the victim (lowest-priority/youngest, or
+    least-recently-admitted under ``eviction="lru"``) is shed:
+      - ``preemption="recompute"`` (PR 1): KV is dropped and the request
+        re-queues to re-prefill prompt + generated output;
+      - ``preemption="swap"``: the victim's block table spills to host DRAM
+        and re-attaches block-exactly when pressure drops — no recompute
+        debt, at the cost of host-link DMA the simulator prices.
+    Greedy outputs are token-identical either way;
   * prefetch: each StepPlan carries a PrefetchPlan for the *next* attention
-    op's KV (one-layer lookahead), built from the decode set's context
-    lengths plus every prefill finishing this step, and the on-chip
-    prefetch-buffer capacity.
+    op's KV (one-layer lookahead) planned over the BEOL tier's block
+    residency — retained blocks are BEOL hits, the delta is a fill the
+    transfer engine must earn from residual bandwidth.
 """
 from __future__ import annotations
 
@@ -32,9 +37,13 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.prefetch import PrefetchPlan, PrefetchPlanner
+from repro.memory.manager import KVMemoryManager
 from repro.serving.request import Request, State
 
 POLICIES = ("fcfs", "sjf", "priority")
+PREEMPTION_MODES = ("recompute", "swap")
+EVICTION_MODES = ("priority", "lru")
+BEOL_POLICIES = ("longest", "priority")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,12 +56,34 @@ class SchedulerConfig:
     # total KV tokens the backing store holds across all active requests
     # (None = unbounded). Exceeding it triggers decode preemption.
     kv_capacity_tokens: Optional[int] = None
+    # how a preempted decode's KV is handled: recompute (drop + re-prefill)
+    # or swap (spill block table to host, restore on re-admission)
+    preemption: str = "recompute"
+    # preemption victim order: "priority" (lowest priority, youngest) or
+    # "lru" (least-recently-(re)admitted, LRU HBM eviction)
+    eviction: str = "priority"
+    # paged KV block size in tokens (1 = token-granular, PR 1 semantics)
+    kv_block_size: int = 1
+    # BEOL placement policy: "longest" (longest-context-first pinning) or
+    # "priority" (priority-partitioned quotas)
+    beol_policy: str = "longest"
 
     def __post_init__(self):
         if self.policy not in POLICIES:
             raise ValueError(f"unknown policy {self.policy!r}; want one of {POLICIES}")
+        if self.preemption not in PREEMPTION_MODES:
+            raise ValueError(
+                f"unknown preemption {self.preemption!r}; want one of {PREEMPTION_MODES}")
+        if self.eviction not in EVICTION_MODES:
+            raise ValueError(
+                f"unknown eviction {self.eviction!r}; want one of {EVICTION_MODES}")
+        if self.beol_policy not in BEOL_POLICIES:
+            raise ValueError(
+                f"unknown beol_policy {self.beol_policy!r}; want one of {BEOL_POLICIES}")
         if self.max_concurrent_prefills < 1:
             raise ValueError("max_concurrent_prefills must be >= 1")
+        if self.kv_block_size < 1:
+            raise ValueError("kv_block_size must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,7 +105,11 @@ class StepPlan:
     decode_rids: List[int]
     prefill_segments: List[PrefillSegment] = dataclasses.field(default_factory=list)
     preempted_rids: List[int] = dataclasses.field(default_factory=list)
+    # swap-mode traffic this step: (rid, slot at spill time) / (rid, new slot)
+    swapped_out: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    swapped_in: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
     prefetch: Optional[PrefetchPlan] = None
+    prefetch_committed: bool = False  # BEOL placement landed (sim or engine)
 
     @property
     def total_prefill_tokens(self) -> int:
@@ -103,6 +138,9 @@ class SchedStats:
     decode_tokens: int = 0
     preemptions: int = 0
     preempted_tokens: int = 0  # KV tokens dropped (recompute debt)
+    swap_outs: int = 0
+    swap_ins: int = 0
+    swapped_out_tokens: int = 0  # KV tokens spilled to host (no recompute debt)
 
     def packing_efficiency(self, chunk_size: int) -> float:
         """Scheduled tokens / chunk budget — 1.0 means every step was full."""
@@ -115,11 +153,21 @@ class Scheduler:
     def __init__(self, cfg: SchedulerConfig, model_cfg: ModelConfig):
         self.cfg = cfg
         self.model_cfg = model_cfg
-        self.planner = PrefetchPlanner(model_cfg, cfg.prefetch_buffer_bytes)
+        # the memory subsystem is the single source of truth for KV occupancy
+        self.mem = KVMemoryManager(
+            model_cfg,
+            block_size=cfg.kv_block_size,
+            capacity_tokens=cfg.kv_capacity_tokens,
+            beol_bytes=cfg.prefetch_buffer_bytes,
+            beol_policy=cfg.beol_policy,
+        )
+        self.planner = PrefetchPlanner(model_cfg, cfg.prefetch_buffer_bytes,
+                                       mem=self.mem)
         self.waiting: List[Request] = []
         self.active: Dict[int, Request] = {}  # slot -> request (prefill or decode)
         self.free_slots: List[int] = list(range(cfg.max_decode_batch))
         self.prefilling: List[Request] = []  # admission order
+        self.swapped: List[Request] = []  # swap-out order (oldest first)
         self.requests: Dict[int, Request] = {}
         self.stats = SchedStats()
 
@@ -131,11 +179,12 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or self.active)
+        return bool(self.waiting or self.active or self.swapped)
 
     @property
     def kv_in_use(self) -> int:
-        return sum(r.context_len for r in self.active.values())
+        """Device-resident KV tokens (block tables; host-swapped KV excluded)."""
+        return self.mem.device_tokens
 
     def packing_efficiency(self) -> float:
         return self.stats.packing_efficiency(self.cfg.chunk_size)
@@ -154,24 +203,66 @@ class Scheduler:
         return best
 
     def _preempt_victim(self, decodes: List[Request]) -> Request:
-        """Lowest priority first, then youngest (latest arrival, highest rid)."""
+        """priority: lowest priority first, then youngest (latest arrival).
+        lru: least-recently-(re)admitted (LRU HBM eviction)."""
+        if self.cfg.eviction == "lru":
+            rid = self.mem.tiers.lru_victim((r.rid, r.arrival_time) for r in decodes)
+            return self.requests[rid]
         return min(decodes, key=lambda r: (r.priority, -r.arrival_time, -r.rid))
 
     def _preempt(self, req: Request, plan: StepPlan) -> None:
         self.stats.preemptions += 1
-        self.stats.preempted_tokens += req.context_len
         req.preemptions += 1
         plan.preempted_rids.append(req.rid)
-        del self.active[req.slot]
-        self.free_slots.append(req.slot)
+        slot = req.slot
+        del self.active[slot]
+        self.free_slots.append(slot)
         self.free_slots.sort()
         req.slot = None
+        if self.cfg.preemption == "swap":
+            # swap-style preemption: the block table spills to host DRAM and
+            # all request state (prefill_pos, output) survives intact.
+            tokens = self.mem.swap_out(req.rid)
+            self.stats.swap_outs += 1
+            self.stats.swapped_out_tokens += tokens
+            req.swaps += 1
+            req.state = State.SWAPPED
+            plan.swapped_out.append((req.rid, slot))
+            self.swapped.append(req)
+            return
         # recompute-style preemption: KV is dropped; the generated output
         # becomes part of the effective prompt and is re-prefilled later.
+        self.stats.preempted_tokens += self.mem.tokens_of(req.rid)
+        self.mem.free(req.rid)
         req.restart_output_len = len(req.output)
         req.prefill_pos = 0
         req.state = State.QUEUED
         self.waiting.append(req)
+
+    def _restore_swapped(self, plan: StepPlan, now: float) -> None:
+        """Re-admit swapped-out decodes (oldest first) when a slot is free
+        and the capacity budget allows. If nothing is decoding, the oldest
+        swapped request is force-restored so the system always progresses —
+        same soft-capacity escape hatch as the never-preempt-last-decode
+        rule."""
+        while self.swapped and self.free_slots:
+            req = self.swapped[0]
+            decode_rids = [r.rid for r in self.active.values()
+                           if r.state == State.DECODE]
+            tokens = self.mem.swapped_tokens_of(req.rid)
+            # +1: the restored request decodes (and grows) this very step
+            fits = self.mem.fits_after_growth(decode_rids, extra_tokens=tokens + 1)
+            forced = not decode_rids
+            if not (fits or forced):
+                break
+            self.swapped.pop(0)
+            self.mem.swap_in(req.rid)
+            self.mem.tiers.touch(req.rid, self.stats.steps)
+            self.stats.swap_ins += 1
+            req.slot = self.free_slots.pop(0)
+            req.state = State.DECODE
+            self.active[req.slot] = req
+            plan.swapped_in.append((req.rid, req.slot))
 
     # ----------------------------------------------------------------- steps
     def next_step(self, now: float = 0.0) -> Optional[StepPlan]:
@@ -179,15 +270,23 @@ class Scheduler:
         plan = StepPlan(decode_slots=[], decode_rids=[])
 
         # KV-pressure preemption: each decode grows its context by one this
-        # step; shed the lowest-priority/youngest decodes until the projected
-        # KV fits. Never preempt the last remaining decode (no livelock).
+        # step; shed victims until the projected block occupancy fits. Never
+        # preempt the last remaining decode (no livelock).
         if self.cfg.kv_capacity_tokens is not None:
             while True:
                 decodes = [r for r in self.active.values() if r.state == State.DECODE]
-                projected = self.kv_in_use + len(decodes)
-                if projected <= self.cfg.kv_capacity_tokens or len(decodes) <= 1:
+                if self.mem.fits_after_growth([r.rid for r in decodes]):
+                    break
+                if len(decodes) <= 1:
+                    # soft capacity: the last decode runs over budget
+                    self.mem.over_capacity_steps += 1
                     break
                 self._preempt(self._preempt_victim(decodes), plan)
+
+        # swap-in restores happen after shedding: pressure just measured, so
+        # a restore never immediately re-preempts within the same step
+        if self.swapped:
+            self._restore_swapped(plan, now)
 
         for slot, req in sorted(self.active.items()):
             if req.state == State.DECODE:
@@ -211,6 +310,7 @@ class Scheduler:
                 pre.state = State.PREFILL
                 self.active[pre.slot] = pre
                 self.prefilling.append(pre)
+                self.mem.tiers.touch(pre.rid, self.stats.steps)
             take = min(budget, pre.total_prefill_len - pre.prefill_pos)
             plan.prefill_segments.append(PrefillSegment(
                 rid=pre.rid, slot=pre.slot, start=pre.prefill_pos, length=take,
@@ -221,8 +321,8 @@ class Scheduler:
             budget -= take
             scheduled.add(pre.rid)
 
-        # preemption only fires with >= 2 decodes, of which >= 1 survives into
-        # the plan — so an empty plan implies no state changed this call.
+        # preemption/restores only fire with >= 1 surviving decode in the
+        # plan — so an empty plan implies no state changed this call.
         if plan.is_empty:
             return None
 
@@ -234,7 +334,8 @@ class Scheduler:
             if seg.finishes:
                 ctx[seg.rid] = self.requests[seg.rid].total_prefill_len
                 finishing.append(seg.rid)
-        plan.prefetch = self.planner.plan(ctx, finishing=finishing)
+        prios = {r: self.requests[r].priority for r in ctx}
+        plan.prefetch = self.planner.plan(ctx, finishing=finishing, priorities=prios)
 
         self.stats.steps += 1
         self.stats.scheduled_tokens += plan.total_tokens
@@ -242,8 +343,30 @@ class Scheduler:
         self.stats.prefill_tokens += plan.total_prefill_tokens
         return plan
 
+    def commit_prefetch(self, plan: StepPlan,
+                        earned_fill_bytes: Optional[float] = None) -> None:
+        """Land this step's BEOL placement. The simulator calls this with the
+        fill bytes the transfer engine actually earned; the engine (and
+        ``complete_step``, as a fallback) commits the full placement."""
+        pf = plan.prefetch
+        if pf is None or pf.placement is None or plan.prefetch_committed:
+            return
+        earned_blocks = None
+        if earned_fill_bytes is not None:
+            earned_blocks = int(earned_fill_bytes // max(self.mem.tiers.block_bytes, 1))
+        self.mem.commit_beol(pf.placement, earned_blocks, step=self.stats.steps)
+        plan.prefetch_committed = True
+
     def complete_step(self, plan: StepPlan, now: float = 0.0) -> List[int]:
         """Advance request states after a step executed. Returns finished rids."""
+        self.commit_prefetch(plan)
+        # block tables grow when the step's KV is actually written: each
+        # prefill chunk's tokens (+1 slot for the first output token when the
+        # prefill finishes) and one token per decode
+        for seg in plan.prefill_segments:
+            self.mem.on_prefill(seg.rid, seg.length + (1 if seg.finishes else 0))
+        for rid in plan.decode_rids:
+            self.mem.on_decode(rid)
         finished: List[int] = []
         for seg in plan.prefill_segments:
             req = self.requests[seg.rid]
@@ -268,6 +391,7 @@ class Scheduler:
                 req.state = State.DONE
                 req.finish_time = now
                 finished.append(rid)
+                self.mem.free(rid)
                 if req.slot is not None:
                     del self.active[req.slot]
                     self.free_slots.append(req.slot)

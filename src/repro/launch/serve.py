@@ -34,6 +34,10 @@ def main():
                     help="prefill requests packable into one step")
     ap.add_argument("--kv-capacity", type=int, default=None,
                     help="total KV token budget; exceeding it preempts decodes")
+    ap.add_argument("--preemption", choices=["recompute", "swap"], default="recompute",
+                    help="drop-and-re-prefill vs spill-to-host preemption")
+    ap.add_argument("--kv-block", type=int, default=1,
+                    help="paged KV block size in tokens")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -46,7 +50,8 @@ def main():
         chunk_size=args.chunk, max_decode_batch=args.max_batch,
         prefetch_buffer_bytes=int(args.prefetch_mb * 2**20),
         max_concurrent_prefills=args.max_prefills, policy=args.policy,
-        kv_capacity_tokens=args.kv_capacity),
+        kv_capacity_tokens=args.kv_capacity, preemption=args.preemption,
+        kv_block_size=args.kv_block),
         max_len=args.max_len)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
@@ -61,6 +66,7 @@ def main():
           f"completed={m['completed']}/{m['submitted']} "
           f"pack_eff={m['packing_efficiency']:.2f} "
           f"preemptions={int(m['preemptions'])} "
+          f"swaps={int(m['swap_outs'])} "
           f"prefetch_cov={np.mean(eng.prefetch_log):.2f}")
 
 

@@ -1,0 +1,29 @@
+"""Tiered KV-cache memory subsystem: paged block allocator, BEOL/HBM/host
+tier model, and the transfer engine that prices placement deltas as DMA."""
+from repro.memory.block_allocator import (
+    BlockAllocator,
+    BlockTable,
+    DoubleFree,
+    OutOfBlocks,
+)
+from repro.memory.manager import KVMemoryManager, SwapRecord
+from repro.memory.tiers import BEOL, HBM, HOST, Placement, TierManager
+from repro.memory.transfers import DMAPlan, DMAReport, Transfer, TransferEngine
+
+__all__ = [
+    "BEOL",
+    "HBM",
+    "HOST",
+    "BlockAllocator",
+    "BlockTable",
+    "DMAPlan",
+    "DMAReport",
+    "DoubleFree",
+    "KVMemoryManager",
+    "OutOfBlocks",
+    "Placement",
+    "SwapRecord",
+    "TierManager",
+    "Transfer",
+    "TransferEngine",
+]

@@ -1,0 +1,190 @@
+"""Paged KV-cache block allocator (vLLM-style, block-granular bookkeeping).
+
+KV storage is carved into fixed-size blocks of ``block_size`` tokens. Each
+request owns a BlockTable — an ordered list of block ids covering its context
+prefix — and blocks are ref-counted so tables can share prefixes (fork).
+The allocator is the scheduler's source of truth for KV occupancy: capacity
+checks, preemption pressure, and swap accounting are all expressed in blocks
+rather than the raw token counter the seed scheduler used.
+
+Two capacity modes:
+  * bounded (``num_blocks`` set): ``grow`` raises OutOfBlocks when the free
+    list is exhausted — used by property tests and hard-capacity backends;
+  * unbounded (``num_blocks=None``): fresh block ids are minted on demand —
+    used by the Scheduler, which enforces *soft* capacity itself (it must be
+    able to over-subscribe by design: the last remaining decode is never
+    preempted, so a lone long context may legally exceed the budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+class OutOfBlocks(RuntimeError):
+    """Bounded allocator exhausted."""
+
+
+class DoubleFree(RuntimeError):
+    """A block's refcount would go negative, or a table was freed twice."""
+
+
+@dataclasses.dataclass
+class BlockTable:
+    """One request's ordered block list covering its context prefix."""
+
+    rid: int
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    num_tokens: int = 0  # tokens actually written/reserved (<= capacity)
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.blocks)
+
+    def capacity_tokens(self, block_size: int) -> int:
+        return len(self.blocks) * block_size
+
+    def slack_tokens(self, block_size: int) -> int:
+        """Reserved-but-unused tokens in the tail block (internal fragmentation)."""
+        return self.capacity_tokens(block_size) - self.num_tokens
+
+
+class BlockAllocator:
+    def __init__(self, block_size: int, num_blocks: Optional[int] = None):
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.tables: Dict[int, BlockTable] = {}
+        self.ref_count: Dict[int, int] = {}
+        self._free: List[int] = list(range(num_blocks)) if num_blocks else []
+        self._next_id = num_blocks or 0
+        # counters
+        self.allocated_blocks_total = 0
+        self.freed_blocks_total = 0
+        self.peak_used_blocks = 0
+
+    # ---------------------------------------------------------------- sizing
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold n_tokens (ceil)."""
+        return -(-max(n_tokens, 0) // self.block_size)
+
+    @property
+    def used_blocks(self) -> int:
+        return len(self.ref_count)
+
+    @property
+    def used_tokens(self) -> int:
+        return sum(t.num_tokens for t in self.tables.values())
+
+    @property
+    def free_blocks(self) -> Optional[int]:
+        """Free blocks remaining; None when unbounded."""
+        if self.num_blocks is None:
+            return None
+        return self.num_blocks - self.used_blocks
+
+    def fragmentation(self) -> float:
+        """Internal fragmentation: reserved-but-unused fraction of used blocks."""
+        cap = self.used_blocks * self.block_size
+        if cap == 0:
+            return 0.0
+        return 1.0 - self.used_tokens / cap
+
+    # ------------------------------------------------------------ allocation
+    def _mint(self) -> int:
+        if self._free:
+            return self._free.pop()
+        if self.num_blocks is not None:
+            raise OutOfBlocks(f"all {self.num_blocks} blocks in use")
+        bid = self._next_id
+        self._next_id += 1
+        return bid
+
+    def table(self, rid: int) -> BlockTable:
+        if rid not in self.tables:
+            self.tables[rid] = BlockTable(rid)
+        return self.tables[rid]
+
+    def can_grow(self, rid: int, n_tokens: int) -> bool:
+        if self.num_blocks is None:
+            return True
+        t = self.tables.get(rid) or BlockTable(rid)
+        need = self.blocks_for(t.num_tokens + n_tokens) - t.num_blocks
+        return need <= self.num_blocks - self.used_blocks
+
+    def grow(self, rid: int, n_tokens: int) -> List[int]:
+        """Extend rid's table to cover n_tokens more; returns new block ids.
+        Transactional: on OutOfBlocks the table is left exactly as it was."""
+        t = self.table(rid)
+        t.num_tokens += n_tokens
+        new: List[int] = []
+        try:
+            while t.num_blocks * self.block_size < t.num_tokens:
+                bid = self._mint()
+                t.blocks.append(bid)
+                self.ref_count[bid] = 1
+                new.append(bid)
+        except OutOfBlocks:
+            t.num_tokens -= n_tokens
+            for bid in reversed(new):
+                t.blocks.pop()
+                del self.ref_count[bid]
+                self._free.append(bid)
+            if not t.blocks and t.num_tokens == 0:
+                del self.tables[rid]
+            raise
+        self.allocated_blocks_total += len(new)
+        self.peak_used_blocks = max(self.peak_used_blocks, self.used_blocks)
+        return new
+
+    def fork(self, src_rid: int, dst_rid: int) -> BlockTable:
+        """Share src's blocks with a new table (copy-on-write prefix sharing)."""
+        if dst_rid in self.tables:
+            raise ValueError(f"rid {dst_rid} already has a table")
+        src = self.tables[src_rid]
+        dst = BlockTable(dst_rid, blocks=list(src.blocks), num_tokens=src.num_tokens)
+        for bid in dst.blocks:
+            self.ref_count[bid] += 1
+        self.tables[dst_rid] = dst
+        return dst
+
+    def free(self, rid: int) -> int:
+        """Release rid's table; returns blocks actually returned to the free
+        list (shared blocks stay live until their last owner frees)."""
+        return self._release(rid)[1]
+
+    def detach(self, rid: int) -> BlockTable:
+        """Remove rid's table, recycling its device blocks (swap-out: the
+        token count moves to another tier's bookkeeping; use ``attach`` to
+        re-admit)."""
+        return self._release(rid)[0]
+
+    def _release(self, rid: int):
+        t = self.tables.pop(rid, None)
+        if t is None:
+            raise DoubleFree(f"rid {rid} has no table (already freed?)")
+        released = 0
+        for bid in t.blocks:
+            rc = self.ref_count.get(bid)
+            if rc is None:
+                raise DoubleFree(f"block {bid} already free")
+            if rc == 1:
+                del self.ref_count[bid]
+                self._free.append(bid)
+                released += 1
+            else:
+                self.ref_count[bid] = rc - 1
+        self.freed_blocks_total += released
+        return t, released
+
+    def attach(self, table: BlockTable) -> BlockTable:
+        """Re-admit a detached table (swap-in): fresh device blocks are
+        allocated for its token count; block *count* round-trips exactly."""
+        if table.rid in self.tables:
+            raise ValueError(f"rid {table.rid} already has a table")
+        fresh = BlockTable(table.rid)
+        self.tables[table.rid] = fresh
+        tokens, fresh.num_tokens = table.num_tokens, 0
+        self.grow(table.rid, tokens)
+        return fresh

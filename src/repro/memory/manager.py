@@ -1,0 +1,154 @@
+"""KV-cache memory manager: the scheduler's single source of truth.
+
+Composes the paged block allocator (device occupancy), the tier manager
+(BEOL residency), and host-side swap bookkeeping into one object both the
+Scheduler and the service simulator consult. Capacity questions that PR 1
+answered with a raw token counter now go through block tables:
+
+  * occupancy   — ``device_tokens`` / ``device_blocks`` from live tables;
+  * pressure    — ``fits_after_growth`` projects this step's decode growth
+    block-granularly against the (soft) capacity budget;
+  * preemption  — ``free`` (recompute: KV dropped) vs ``swap_out`` /
+    ``swap_in`` (table detaches to host DRAM and re-attaches block-exactly);
+  * prefetch    — ``place_beol`` ranks the decode set's blocks into the
+    BEOL tier for the tier-aware PrefetchPlanner.
+
+Capacity stays *soft* on purpose: the last remaining decode is never
+preempted (no-livelock rule inherited from PR 1), so a lone long context
+may legally exceed the budget — the allocator over-subscribes and the
+overflow is visible in ``over_capacity_steps``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Set
+
+from repro.configs.base import ModelConfig
+from repro.memory.block_allocator import BlockAllocator, BlockTable
+from repro.memory.tiers import Placement, TierManager
+
+
+@dataclasses.dataclass
+class SwapRecord:
+    """A swapped-out request's KV, parked in host DRAM."""
+
+    table: BlockTable  # detached device table (block count round-trips)
+    tokens: int
+
+
+class KVMemoryManager:
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        block_size: int = 1,
+        capacity_tokens: Optional[int] = None,
+        beol_bytes: int = 0,
+        beol_policy: str = "longest",
+    ):
+        self.cfg = model_cfg
+        self.block_size = block_size
+        self.capacity_tokens = capacity_tokens
+        # soft capacity: the allocator is unbounded, the budget is enforced
+        # by the scheduler's preemption loop via fits_after_growth()
+        self.allocator = BlockAllocator(block_size, num_blocks=None)
+        self.kv_btl = model_cfg.kv_bytes_per_token_layer
+        self.kv_bytes_per_token = self.kv_btl * model_cfg.n_attn_layers
+        block_bytes_layer = max(block_size * self.kv_btl, 1)
+        self.tiers = TierManager(beol_bytes, block_bytes_layer, policy=beol_policy)
+        self.swapped: Dict[int, SwapRecord] = {}
+        self.over_capacity_steps = 0
+
+    # ------------------------------------------------------------- occupancy
+    @property
+    def capacity_blocks(self) -> Optional[int]:
+        if self.capacity_tokens is None:
+            return None
+        return self.capacity_tokens // self.block_size
+
+    @property
+    def device_tokens(self) -> int:
+        return self.allocator.used_tokens
+
+    @property
+    def device_blocks(self) -> int:
+        return self.allocator.used_blocks
+
+    @property
+    def host_tokens(self) -> int:
+        return sum(r.tokens for r in self.swapped.values())
+
+    def tokens_of(self, rid: int) -> int:
+        t = self.allocator.tables.get(rid)
+        return t.num_tokens if t is not None else 0
+
+    def blocks_of(self, rid: int) -> int:
+        t = self.allocator.tables.get(rid)
+        return t.num_blocks if t is not None else 0
+
+    def fragmentation(self) -> float:
+        return self.allocator.fragmentation()
+
+    # -------------------------------------------------------------- pressure
+    def projected_blocks(self, growing_rids: Iterable[int]) -> int:
+        """Device blocks after each growing rid appends one token."""
+        grow: Set[int] = set(growing_rids)
+        total = 0
+        for rid, t in self.allocator.tables.items():
+            tokens = t.num_tokens + (1 if rid in grow else 0)
+            total += self.allocator.blocks_for(tokens)
+        return total
+
+    def fits_after_growth(self, growing_rids: Iterable[int],
+                          extra_tokens: int = 0) -> bool:
+        """Would this step's decode growth (+ an optional swap-in of
+        ``extra_tokens``) stay within the soft capacity budget?"""
+        cap = self.capacity_blocks
+        if cap is None:
+            return True
+        extra = self.allocator.blocks_for(extra_tokens)
+        return self.projected_blocks(growing_rids) + extra <= cap
+
+    # ------------------------------------------------------------- lifecycle
+    def on_prefill(self, rid: int, n_tokens: int) -> None:
+        self.allocator.grow(rid, n_tokens)
+
+    def on_decode(self, rid: int) -> None:
+        self.allocator.grow(rid, 1)
+
+    def free(self, rid: int) -> int:
+        """Drop a request's KV entirely (finish or recompute preemption)."""
+        self.tiers.drop(rid)
+        return self.allocator.free(rid)
+
+    # ------------------------------------------------------------------ swap
+    def swap_out(self, rid: int) -> int:
+        """Spill rid's KV to host DRAM; returns tokens moved."""
+        self.tiers.drop(rid)
+        table = self.allocator.detach(rid)
+        self.swapped[rid] = SwapRecord(table=table, tokens=table.num_tokens)
+        return table.num_tokens
+
+    def swap_in(self, rid: int) -> int:
+        """Restore rid's KV from host DRAM; returns tokens moved. The
+        restored table has exactly the same block count (block-exact)."""
+        rec = self.swapped.pop(rid)
+        self.allocator.attach(rec.table)
+        return rec.tokens
+
+    def swapped_tokens_of(self, rid: int) -> int:
+        return self.swapped[rid].tokens
+
+    def swap_bytes(self, tokens: int) -> int:
+        """Full-stack KV bytes (all attention layers) for a token count."""
+        return tokens * self.kv_bytes_per_token
+
+    # -------------------------------------------------------------- prefetch
+    def place_beol(self, ctx_tokens: Dict[int, int], finishing: Iterable[int],
+                   priorities: Optional[Dict[int, int]] = None) -> Placement:
+        return self.tiers.place(ctx_tokens, self.block_size,
+                                finishing=finishing, priorities=priorities)
+
+    def commit_beol(self, placement: Placement,
+                    earned_fill_blocks: Optional[int] = None,
+                    step: int = 0) -> None:
+        self.tiers.commit(placement, earned_fill_blocks, step=step)

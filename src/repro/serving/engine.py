@@ -80,6 +80,9 @@ class Engine:
         self.bucket = self.n_slots + sched_cfg.chunk_size
         self.steps_run = 0
         self.prefetch_log: List[float] = []
+        # swap-style preemption: host-DRAM copies of spilled slot rows,
+        # keyed by rid (the "host tier" of the memory subsystem)
+        self.swap_store: Dict[int, dict] = {}
 
         if self.packed_mode:
             self._packed = jax.jit(
@@ -104,6 +107,7 @@ class Engine:
             return None
         if plan.prefetch is not None:
             self.prefetch_log.append(plan.prefetch.coverage)
+        self._apply_swaps(plan)
         if self.packed_mode:
             self._run_packed(plan)
         else:
@@ -111,6 +115,38 @@ class Engine:
         self.scheduler.complete_step(plan, now)
         self.steps_run += 1
         return plan
+
+    # ----------------------------------------------------------------- swaps
+    def block_spans(self, rid: int) -> List[Tuple[int, int, int]]:
+        """Map a request's block table onto its slot cache's token axis:
+        [(block_id, start_token, n_tokens)] — how the paged allocator's
+        blocks tile the dense (slot, max_len) KV rows."""
+        mem = self.scheduler.mem
+        table = mem.allocator.tables.get(rid)
+        if table is None:
+            return []
+        bs = mem.block_size
+        return [
+            (bid, i * bs, min(bs, table.num_tokens - i * bs))
+            for i, bid in enumerate(table.blocks)
+        ]
+
+    def _apply_swaps(self, plan: StepPlan) -> None:
+        """Execute the plan's swap traffic on the slot caches: spilled slots
+        copy to host memory (swap_store), restored requests land in their
+        new slot before the compute call. Outs run first so a swap-in may
+        reuse a just-freed slot within the same step."""
+        for rid, slot in plan.swapped_out:
+            self.swap_store[rid] = jax.device_get({
+                k: _take_slot(self.cache[k], slot, _batch_axis(k))
+                for k in self.cache
+            })
+        for rid, slot in plan.swapped_in:
+            saved = self.swap_store.pop(rid)
+            self.cache = {
+                k: _put_slot(self.cache[k], saved[k], slot, _batch_axis(k))
+                for k in self.cache
+            }
 
     def _sample(self, logits_row) -> int:
         return int(sampling.greedy(logits_row))

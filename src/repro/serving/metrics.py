@@ -15,10 +15,13 @@ def percentile(xs: List[float], p: float) -> float:
 
 
 def summarize(requests: Iterable[Request], horizon: float,
-              sched_stats=None, chunk_size: Optional[int] = None) -> Dict[str, float]:
+              sched_stats=None, chunk_size: Optional[int] = None,
+              mem_stats: Optional[Dict[str, float]] = None) -> Dict[str, float]:
     """Aggregate request-level latency metrics; when the scheduler's
     ``SchedStats`` (and its chunk size) are passed, also surface scheduler
-    health: preemption counts, recompute debt, and packing efficiency."""
+    health: preemption counts, recompute debt, swap traffic, and packing
+    efficiency. ``mem_stats`` merges memory-subsystem counters (tier
+    hit-rate, swapped bytes, HBM bytes moved/saved) from the service sim."""
     reqs = [r for r in requests]
     done = [r for r in reqs if r.finish_time is not None]
     ttft = [r.first_token_time - r.arrival_time for r in done if r.first_token_time is not None]
@@ -43,6 +46,11 @@ def summarize(requests: Iterable[Request], horizon: float,
         m["preemptions"] = float(sched_stats.preemptions)
         m["preempted_tokens"] = float(sched_stats.preempted_tokens)
         m["steps"] = float(sched_stats.steps)
+        m["swap_outs"] = float(sched_stats.swap_outs)
+        m["swap_ins"] = float(sched_stats.swap_ins)
+        m["swapped_out_tokens"] = float(sched_stats.swapped_out_tokens)
         if chunk_size is not None:
             m["packing_efficiency"] = sched_stats.packing_efficiency(chunk_size)
+    if mem_stats:
+        m.update({k: float(v) for k, v in mem_stats.items()})
     return m

@@ -10,6 +10,7 @@ class State(enum.Enum):
     QUEUED = "queued"
     PREFILL = "prefill"
     DECODE = "decode"
+    SWAPPED = "swapped"  # KV spilled to host DRAM, awaiting re-admission
     DONE = "done"
 
 
@@ -27,10 +28,13 @@ class Request:
     prefill_pos: int = 0  # effective-prompt tokens already prefilled
     output: List[int] = dataclasses.field(default_factory=list)
 
-    # preemption bookkeeping: a preempted decode drops its KV and re-prefills
-    # its *effective prompt* = prompt + the output tokens generated so far.
+    # preemption bookkeeping: a recompute-preempted decode drops its KV and
+    # re-prefills its *effective prompt* = prompt + the output tokens
+    # generated so far; a swap-preempted decode keeps all state and its KV
+    # moves to host DRAM until re-admission.
     restart_output_len: int = 0  # output tokens baked into the current prefill
-    preemptions: int = 0  # times this request was preempted
+    preemptions: int = 0  # times this request was preempted (either kind)
+    swaps: int = 0  # times this request was swapped out to host
 
     # timing (engine: wall clock; sim: simulated seconds)
     schedule_time: Optional[float] = None  # first time any chunk ran

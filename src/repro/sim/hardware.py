@@ -28,6 +28,9 @@ class Hardware:
     # the calibration drives this to "effectively on-chip-fast", consistent
     # with the paper's high-speed AOS gain-cell claims.
     prefetch_read_mult: float = 32.0
+    # host DMA link bandwidth (device <-> host DRAM), bytes/s — prices
+    # swap-style preemption spills/restores in the memory tier model
+    host_bw: float = 64e9
 
     def matmul_time(self, m: int, k: int, n: int) -> float:
         """Compute-side latency of an (m,k)x(k,n) matmul.
@@ -64,6 +67,7 @@ TPUV6E = Hardware(
     prefetch_buffer=512 * MB,
     sa=(128, 128, 16),
     vu=(128, 16, 16),
+    host_bw=64e9,
 )
 
 TPUV7 = Hardware(
@@ -75,6 +79,7 @@ TPUV7 = Hardware(
     prefetch_buffer=1 * GB,
     sa=(256, 256, 16),
     vu=(256, 32, 16),
+    host_bw=128e9,
 )
 
 # grading/roofline constants (TPU v5e-class) — used ONLY by benchmarks/roofline.py

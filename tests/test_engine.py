@@ -163,6 +163,96 @@ def test_engine_preemption_matches_serial(arch):
         )
 
 
+@pytest.mark.parametrize("arch", MULTI_PREFILL_ARCHS)
+def test_engine_swap_preemption_matches_serial(arch):
+    """Swap-style preemption (spill KV slot rows to host, restore on
+    re-admission) must keep greedy outputs token-identical to the serial
+    reference — and therefore to recompute-style preemption."""
+    cfg = dropless(reduce_config(get_config(arch)))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = make_requests(cfg, jax.random.PRNGKey(44), n=3)
+    expected = {r.rid: serial_reference(model, params, r) for r in reqs}
+
+    eng = Engine(
+        model, params,
+        SchedulerConfig(chunk_size=16, max_decode_batch=3,
+                        prefetch_buffer_bytes=1 << 20, max_concurrent_prefills=2,
+                        kv_capacity_tokens=30, preemption="swap"),
+        max_len=MAX_LEN,
+    )
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                           max_new_tokens=r.max_new_tokens, frames=r.frames))
+    eng.run(max_steps=500)
+
+    assert eng.scheduler.stats.swap_outs > 0, "KV pressure never triggered a swap"
+    assert eng.scheduler.stats.swap_ins == eng.scheduler.stats.swap_outs
+    assert not eng.swap_store, "host tier still holds unrestored KV"
+    for r in reqs:
+        got = eng.scheduler.requests[r.rid].output
+        assert got == expected[r.rid], (
+            f"{arch} rid={r.rid}: swapped {got} != serial {expected[r.rid]}"
+        )
+        # no recompute debt: swap preserves prefill progress verbatim
+        assert eng.scheduler.requests[r.rid].restart_output_len == 0
+
+
+def test_engine_swap_restore_is_block_exact():
+    """A swap-out -> swap-in round trip restores the victim's KV rows
+    bit-exactly, verified block-by-block through the allocator's block
+    table mapped onto the slot caches."""
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(
+        model, params,
+        SchedulerConfig(chunk_size=16, max_decode_batch=3,
+                        prefetch_buffer_bytes=1 << 20, max_concurrent_prefills=2,
+                        kv_capacity_tokens=30, preemption="swap",
+                        kv_block_size=4),
+        max_len=MAX_LEN,
+    )
+    for r in make_requests(cfg, jax.random.PRNGKey(45), n=3):
+        eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                           max_new_tokens=r.max_new_tokens))
+
+    snapshots = {}  # rid -> cache rows at swap-out time
+    restored = {}  # rid -> (slot, rows) right after swap-in
+    while eng.scheduler.has_work and eng.steps_run < 500:
+        sch = eng.scheduler
+        plan = sch.next_step(now=float(eng.steps_run))
+        if plan is None:
+            break
+        eng._apply_swaps(plan)
+        for rid, _ in plan.swapped_out:
+            snapshots[rid] = jax.tree.map(np.copy, eng.swap_store[rid])
+        for rid, slot in plan.swapped_in:
+            from repro.serving.engine import _batch_axis, _take_slot
+            restored[rid] = jax.device_get({
+                k: _take_slot(eng.cache[k], slot, _batch_axis(k))
+                for k in eng.cache
+            })
+            # block-table spans map the paged blocks onto the slot rows
+            spans = eng.block_spans(rid)
+            assert spans and all(n > 0 for _, _, n in spans)
+            total = sum(n for _, _, n in spans)
+            assert total == sch.requests[rid].context_len
+        eng._run_packed(plan)
+        sch.complete_step(plan, now=float(eng.steps_run))
+        eng.steps_run += 1
+
+    assert snapshots, "no swap-outs happened"
+    assert set(snapshots) == set(restored)
+    for rid, saved in snapshots.items():
+        got = restored[rid]
+        for k in saved:
+            jax.tree.map(
+                lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+                saved[k], got[k],
+            )
+
+
 def test_engine_multi_prefill_actually_packs():
     """With several short prompts and budget headroom, at least one step
     carries more than one prefill segment."""

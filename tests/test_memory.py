@@ -1,0 +1,405 @@
+"""Property tests for the tiered KV-cache memory subsystem: paged block
+allocator (no double-free, ref-counted sharing, fragmentation), BEOL tier
+placement (capacity respected, coverage monotone in capacity), transfer
+pricing, and swap-style preemption (block-exact round-trips, scheduler
+invariants, strictly less HBM traffic than recompute in the sim)."""
+from __future__ import annotations
+
+import pytest
+from _compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core.prefetch import PrefetchPlanner
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.memory import (
+    BlockAllocator,
+    DoubleFree,
+    KVMemoryManager,
+    OutOfBlocks,
+    TierManager,
+    TransferEngine,
+)
+from repro.serving.request import Request, State
+from repro.sim.hardware import TPUV6E
+from repro.sim.service import simulate_service
+from repro.serving.workload import OPENCHAT_SHAREGPT4
+
+CFG = get_config("llama3.1-8b")
+
+
+# ---------------------------------------------------------------------------
+# block allocator
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=30)
+@given(data=st.data(), block_size=st.integers(1, 32), n_reqs=st.integers(1, 10))
+def test_allocator_invariants(data, block_size, n_reqs):
+    alloc = BlockAllocator(block_size)
+    tokens = {}
+    for rid in range(n_reqs):
+        tokens[rid] = 0
+        for _ in range(data.draw(st.integers(1, 4))):
+            n = data.draw(st.integers(1, 100))
+            alloc.grow(rid, n)
+            tokens[rid] += n
+    # tables cover exactly the requested tokens, block-quantized
+    for rid, t in alloc.tables.items():
+        assert t.num_tokens == tokens[rid]
+        assert (t.num_blocks - 1) * block_size < t.num_tokens <= t.num_blocks * block_size
+    assert alloc.used_tokens == sum(tokens.values())
+    # every used block has refcount >= 1, and ids are unique across tables
+    ids = [b for t in alloc.tables.values() for b in t.blocks]
+    assert len(ids) == len(set(ids))
+    assert all(alloc.ref_count[b] == 1 for b in ids)
+    assert 0.0 <= alloc.fragmentation() < 1.0
+    # free everything: allocator returns to empty
+    for rid in list(alloc.tables):
+        alloc.free(rid)
+    assert alloc.used_blocks == 0 and alloc.used_tokens == 0
+    assert alloc.freed_blocks_total == alloc.allocated_blocks_total
+
+
+def test_allocator_no_double_free():
+    alloc = BlockAllocator(block_size=4)
+    alloc.grow(0, 10)
+    alloc.free(0)
+    with pytest.raises(DoubleFree):
+        alloc.free(0)
+
+
+def test_allocator_bounded_raises():
+    alloc = BlockAllocator(block_size=4, num_blocks=2)
+    alloc.grow(0, 8)  # exactly 2 blocks
+    assert not alloc.can_grow(1, 1)
+    with pytest.raises(OutOfBlocks):
+        alloc.grow(1, 1)
+    alloc.free(0)
+    assert alloc.can_grow(1, 8)
+    alloc.grow(1, 8)  # recycled
+
+
+def test_allocator_fork_refcounts():
+    """Forked tables share blocks; blocks free only at the last owner."""
+    alloc = BlockAllocator(block_size=4)
+    alloc.grow(0, 12)
+    shared = list(alloc.tables[0].blocks)
+    alloc.fork(0, 1)
+    assert alloc.tables[1].blocks == shared
+    assert all(alloc.ref_count[b] == 2 for b in shared)
+    assert alloc.free(0) == 0  # still referenced by rid 1
+    assert all(alloc.ref_count[b] == 1 for b in shared)
+    assert alloc.free(1) == len(shared)
+    assert alloc.used_blocks == 0
+
+
+def test_allocator_swap_round_trip_block_exact():
+    """detach -> attach preserves token count AND block count exactly."""
+    alloc = BlockAllocator(block_size=8)
+    alloc.grow(0, 37)
+    before = (alloc.tables[0].num_tokens, alloc.tables[0].num_blocks)
+    table = alloc.detach(0)
+    assert 0 not in alloc.tables and alloc.used_blocks == 0
+    alloc.attach(table)
+    after = (alloc.tables[0].num_tokens, alloc.tables[0].num_blocks)
+    assert after == before
+
+
+# ---------------------------------------------------------------------------
+# tier placement
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    data=st.data(),
+    budget_blocks=st.integers(0, 64),
+    block_size=st.integers(1, 16),
+    policy=st.sampled_from(["longest", "priority"]),
+    n_reqs=st.integers(1, 10),
+)
+def test_tier_resident_bytes_never_exceed_capacity(data, budget_blocks,
+                                                   block_size, policy, n_reqs):
+    block_bytes = block_size * CFG.kv_bytes_per_token_layer
+    tiers = TierManager(budget_blocks * block_bytes, block_bytes, policy=policy)
+    for step in range(data.draw(st.integers(1, 5))):
+        ctx = {r: data.draw(st.integers(1, 200)) for r in range(n_reqs)}
+        prios = {r: data.draw(st.integers(0, 3)) for r in range(n_reqs)}
+        fin = {r for r in range(n_reqs) if data.draw(st.booleans())}
+        placement = tiers.place(ctx, block_size, finishing=fin, priorities=prios)
+        assert placement.total("desired_blocks") <= tiers.budget_blocks
+        # a desired prefix never exceeds the request's own blocks
+        for r, n in placement.desired_blocks.items():
+            assert 0 <= n <= -(-ctx[r] // block_size)
+        # commit with a random earned budget; residency stays within capacity
+        earned = data.draw(st.integers(0, placement.total("fill_blocks") + 2))
+        tiers.commit(placement, earned_fill_blocks=earned, step=step)
+        assert tiers.resident_blocks <= tiers.budget_blocks
+        assert tiers.resident_bytes <= max(tiers.capacity_bytes, 0)
+
+
+@settings(deadline=None, max_examples=20)
+@given(data=st.data(), n_reqs=st.integers(1, 8))
+def test_prefetch_coverage_monotone_in_beol_size(data, n_reqs):
+    """Bigger BEOL never covers less (plans built fresh at each size)."""
+    ctx = {r: data.draw(st.integers(1, 500)) for r in range(n_reqs)}
+    prev = -1.0
+    for tokens in (0, 64, 256, 1024, 4096):
+        planner = PrefetchPlanner(CFG, buffer_bytes=tokens * CFG.kv_bytes_per_token_layer)
+        cov = planner.plan(dict(ctx)).coverage
+        assert cov >= prev - 1e-12
+        prev = cov
+
+
+def test_tiered_planner_matches_legacy_at_block_size_one():
+    """Tier-aware block placement degenerates to the PR 1 token heuristic."""
+    mem = KVMemoryManager(CFG, block_size=1,
+                          beol_bytes=10 * CFG.kv_bytes_per_token_layer)
+    tiered = PrefetchPlanner(CFG, 10 * CFG.kv_bytes_per_token_layer, mem=mem)
+    legacy = PrefetchPlanner(CFG, 10 * CFG.kv_bytes_per_token_layer)
+    ctx = {1: 8, 2: 4, 3: 2}
+    a, b = tiered.plan(dict(ctx)), legacy.plan(dict(ctx))
+    assert a.resident_tokens == b.resident_tokens
+    assert a.coverage == b.coverage
+
+
+def test_tiered_planner_retains_across_steps():
+    """Blocks resident from the previous step are hits, not fills."""
+    mem = KVMemoryManager(CFG, block_size=4,
+                          beol_bytes=64 * CFG.kv_bytes_per_token_layer)
+    planner = PrefetchPlanner(CFG, 64 * CFG.kv_bytes_per_token_layer, mem=mem)
+    p1 = planner.plan({1: 40})
+    assert p1.retained_bytes == 0 and p1.fill_bytes > 0
+    mem.commit_beol(p1.placement)  # everything lands
+    p2 = planner.plan({1: 41})  # one more decode token
+    assert p2.retained_bytes == 40 * CFG.kv_bytes_per_token_layer
+    assert p2.fill_bytes <= 4 * CFG.kv_bytes_per_token_layer  # just the new block
+
+
+def test_commit_never_lands_unpriced_finishing_blocks():
+    """The earned fill budget prices only streamable (decode) bytes, so a
+    finishing prefill — whose KV is still being written this step — must not
+    soak it into free BEOL residency."""
+    mem = KVMemoryManager(CFG, block_size=4,
+                          beol_bytes=4096 * CFG.kv_bytes_per_token_layer)
+    planner = PrefetchPlanner(CFG, mem.tiers.capacity_bytes, mem=mem)
+    plan = planner.plan({1: 100, 2: 4000}, finishing=[2])
+    assert plan.fill_bytes == 100 * CFG.kv_bytes_per_token_layer  # decode only
+    assert plan.placement.fill_blocks[2] == 0
+    mem.commit_beol(plan.placement, earned_fill_blocks=25)
+    assert mem.tiers.resident == {1: 25}  # finishing rid earns nothing yet
+
+
+def test_priority_partition_protects_high_priority():
+    """Under contention, the priority policy gives the high class residency
+    the longest-first policy would hand entirely to the longer context."""
+    block_bytes = CFG.kv_bytes_per_token_layer
+    tiers = TierManager(8 * block_bytes, block_bytes, policy="priority")
+    ctx = {0: 100, 1: 6}  # rid 0: long but low priority; rid 1: short, high
+    placement = tiers.place(ctx, 1, priorities={0: 0, 1: 5})
+    assert placement.desired_blocks[1] > 0
+    longest = TierManager(8 * block_bytes, block_bytes, policy="longest")
+    assert longest.place(ctx, 1, priorities={0: 0, 1: 5}).desired_blocks[1] == 0
+
+
+def test_planner_finishing_bytes_explicit():
+    """Finishing-prefill residency is split out of the streamable fill."""
+    planner = PrefetchPlanner(CFG, buffer_bytes=10 * CFG.kv_bytes_per_token_layer)
+    plan = planner.plan({1: 4, 2: 100}, finishing=[2])
+    assert plan.resident_tokens == {1: 4, 2: 6}
+    assert plan.finishing_tokens == 6
+    assert plan.finishing_bytes == 6 * CFG.kv_bytes_per_token_layer
+    assert plan.fill_bytes == 4 * CFG.kv_bytes_per_token_layer
+    assert plan.prefetch_bytes == plan.fill_bytes + plan.finishing_bytes
+
+
+def test_planner_attention_free_reports_vacuous_coverage():
+    """Attention-free archs need zero prefetch bytes: coverage is 1.0 (was
+    silently mis-reported against SSM state tokens)."""
+    cfg = get_config("mamba2-2.7b")
+    plan = PrefetchPlanner(cfg, buffer_bytes=1 << 20).plan({1: 100})
+    assert plan.total_tokens == 0
+    assert plan.coverage == 1.0
+    assert plan.prefetch_bytes == 0 and plan.fill_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# transfer engine
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    fill=st.floats(0, 1e9),
+    swap=st.floats(0, 1e9),
+    stage_time=st.floats(1e-6, 1.0),
+    hbm_frac=st.floats(0.0, 1.5),
+)
+def test_transfer_pricing_properties(fill, swap, stage_time, hbm_frac):
+    eng = TransferEngine(TPUV6E)
+    stage_hbm = hbm_frac * stage_time * eng.hbm_stream_bw
+    r = eng.price(eng.build(fill, swap, 0.0), stage_time, stage_hbm)
+    assert 0.0 <= r.earned_fill_bytes <= fill + 1e-6
+    assert r.fill_shortfall_bytes == pytest.approx(fill - r.earned_fill_bytes)
+    assert r.stall_time >= 0.0 and r.hidden_time >= 0.0
+    # fully bandwidth-bound step: nothing can be earned
+    if hbm_frac >= 1.0:
+        assert r.earned_fill_bytes == 0.0
+
+
+def test_transfer_earned_monotone_in_slack():
+    eng = TransferEngine(TPUV6E)
+    fill = 512e6
+    earned = [eng.price(eng.build(fill), t, 0.0).earned_fill_bytes
+              for t in (1e-4, 1e-3, 1e-2)]
+    assert earned[0] <= earned[1] <= earned[2]
+    assert earned[2] > earned[0]
+
+
+# ---------------------------------------------------------------------------
+# swap-style preemption: scheduler + sim
+# ---------------------------------------------------------------------------
+
+
+def drive(sched: Scheduler, max_steps=10_000, check=None):
+    step = 0
+    while sched.has_work and step < max_steps:
+        plan = sched.next_step(now=float(step))
+        if plan is None:
+            break
+        if check is not None:
+            check(sched, plan)
+        for rid in plan.decode_rids:
+            sched.requests[rid].output.append(0)
+        for rid in plan.finishing_rids:
+            sched.requests[rid].output.append(0)
+        sched.complete_step(plan, now=float(step))
+        step += 1
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    data=st.data(),
+    chunk=st.integers(4, 32),
+    slots=st.integers(2, 8),
+    kv_cap=st.integers(8, 64),
+    block_size=st.integers(1, 8),
+    eviction=st.sampled_from(["priority", "lru"]),
+)
+def test_swap_preemption_invariants(data, chunk, slots, kv_cap, block_size, eviction):
+    """Swap mode: every request completes, swapped requests leave the device
+    (block tables move to host), restores are block-exact, and device
+    occupancy respects the soft budget whenever >1 decode is active."""
+    cfg = SchedulerConfig(chunk_size=chunk, max_decode_batch=slots,
+                          prefetch_buffer_bytes=1 << 20,
+                          kv_capacity_tokens=kv_cap, max_concurrent_prefills=2,
+                          preemption="swap", eviction=eviction,
+                          kv_block_size=block_size)
+    sched = Scheduler(cfg, CFG)
+    n_reqs = data.draw(st.integers(2, 8))
+    for i in range(n_reqs):
+        sched.add_request(Request(
+            rid=i, prompt=[0] * data.draw(st.integers(1, 30)),
+            max_new_tokens=data.draw(st.integers(1, 15)),
+            priority=data.draw(st.integers(0, 2)),
+        ))
+
+    def check(s, plan):
+        for rid, _ in plan.swapped_out:
+            assert s.requests[rid].state == State.SWAPPED
+            assert rid in s.mem.swapped
+            assert rid not in s.mem.allocator.tables
+            # host record holds exactly the request's KV tokens
+            assert s.mem.swapped_tokens_of(rid) == s.requests[rid].context_len
+        for rid, slot in plan.swapped_in:
+            assert s.requests[rid].state == State.DECODE
+            assert s.requests[rid].slot == slot
+            assert s.mem.tokens_of(rid) == s.requests[rid].context_len
+        decodes = [r for r in s.active.values() if r.state == State.DECODE]
+        if len(decodes) > 1:
+            assert s.kv_in_use <= (kv_cap // block_size + len(decodes)) * block_size
+
+    drive(sched, check=check)
+    for r in sched.requests.values():
+        assert r.state == State.DONE, f"rid {r.rid} stuck in {r.state}"
+        assert len(r.output) == r.max_new_tokens
+        # swap never creates recompute debt
+        assert r.restart_output_len == 0
+    assert sched.stats.swap_outs == sched.stats.swap_ins
+    assert not sched.mem.swapped
+    assert sched.mem.device_tokens == 0  # all tables freed at completion
+
+
+def test_lru_eviction_picks_least_recently_admitted():
+    """eviction="lru": the first victim is the earliest-admitted decode,
+    even though the default priority rule would shed the youngest. The
+    admission timestamp must survive BEOL residency churn (a recently
+    admitted request is not 'oldest' just because placement kept its
+    blocks out of the BEOL)."""
+    victims = {}
+    for eviction in ("priority", "lru"):
+        cfg = SchedulerConfig(chunk_size=16, max_decode_batch=4,
+                              prefetch_buffer_bytes=1 << 20,
+                              kv_capacity_tokens=24, max_concurrent_prefills=2,
+                              eviction=eviction)
+        sched = Scheduler(cfg, CFG)
+        sched.add_request(Request(rid=0, prompt=[0] * 10, max_new_tokens=20,
+                                  arrival_time=0.0))
+        sched.add_request(Request(rid=1, prompt=[0] * 10, max_new_tokens=20,
+                                  arrival_time=1.0))
+        first = []
+
+        def check(s, plan, first=first):
+            first.extend(r for r in plan.preempted_rids)
+
+        drive(sched, check=check)
+        assert first, f"{eviction}: KV pressure never triggered"
+        victims[eviction] = first[0]
+        for r in sched.requests.values():
+            assert r.state == State.DONE
+    assert victims["priority"] == 1  # youngest (seed rule)
+    assert victims["lru"] == 0  # least-recently-admitted
+
+
+def test_over_capacity_steps_counts_soft_overflow():
+    """A lone decode is never preempted; running it over budget is counted."""
+    cfg = SchedulerConfig(chunk_size=16, max_decode_batch=2,
+                          kv_capacity_tokens=8, max_concurrent_prefills=1)
+    sched = Scheduler(cfg, CFG)
+    sched.add_request(Request(rid=0, prompt=[0] * 20, max_new_tokens=10))
+    drive(sched)
+    assert sched.requests[0].state == State.DONE
+    assert sched.stats.preemptions == 0
+    assert sched.mem.over_capacity_steps > 0
+
+
+def test_swap_sim_moves_less_hbm_than_recompute():
+    """Acceptance: under identical KV pressure, swap-style preemption moves
+    strictly fewer HBM bytes than drop-and-re-prefill."""
+    results = {}
+    for pre in ("recompute", "swap"):
+        r = simulate_service(
+            TPUV6E, CFG, OPENCHAT_SHAREGPT4, qps=2.0, mode="packed_prefetch",
+            n_requests=24, kv_capacity_tokens=16_000, max_decode_batch=16,
+            max_concurrent_prefills=2, preemption=pre, kv_block_size=16,
+        )
+        assert r.metrics["completed"] == 24
+        results[pre] = r.metrics
+    assert results["swap"]["swap_outs"] > 0
+    assert results["swap"]["swapped_bytes"] > 0
+    assert results["recompute"]["swapped_bytes"] == 0
+    assert results["swap"]["hbm_bytes_moved"] < results["recompute"]["hbm_bytes_moved"]
+
+
+def test_sim_reports_tier_stats():
+    r = simulate_service(TPUV6E, CFG, OPENCHAT_SHAREGPT4, qps=1.0,
+                         mode="packed_prefetch", n_requests=10, kv_block_size=16)
+    m = r.metrics
+    assert 0.0 <= m["tier_hit_rate"] <= 1.0
+    assert m["hbm_bytes_moved"] > 0
+    assert m["hbm_bytes_saved"] >= 0
+    assert 0.0 <= m["kv_fragmentation"] < 1.0
+    # packed mode has no BEOL: every KV byte crosses HBM
+    r2 = simulate_service(TPUV6E, CFG, OPENCHAT_SHAREGPT4, qps=1.0,
+                          mode="packed", n_requests=10)
+    assert r2.metrics["hbm_bytes_saved"] == 0.0
