@@ -59,7 +59,7 @@ def packing_efficiency_report(print_fn=print, fast: bool = False):
     Table II workloads."""
     n_req = 40 if fast else 100
     print_fn("fig7pack,model,dataset,policy,prefills,pack_eff,preemptions,"
-             "tbt_p99_ms,tier_hit,hbm_tb_moved")
+             "tbt_p99_ms,tier_hit,hbm_tb_moved,attn_savings")
     results = {}
     for arch, hw in SETUPS:
         cfg = get_config(arch)
@@ -78,7 +78,8 @@ def packing_efficiency_report(print_fn=print, fast: bool = False):
                     f"fig7pack,{arch},{wl.name},{policy},{n_pf},"
                     f"{m['packing_efficiency']:.4f},{int(m['preemptions'])},"
                     f"{m['tbt_p99']*1e3:.2f},{m['tier_hit_rate']:.3f},"
-                    f"{m['hbm_bytes_moved']/1e12:.2f}"
+                    f"{m['hbm_bytes_moved']/1e12:.2f},"
+                    f"{m['attn_padding_savings']:.3f}"
                 )
     return results
 

@@ -1,14 +1,25 @@
 """Kernel microbenchmarks (CPU: XLA reference path timing + interpret-mode
-correctness cross-check; the Pallas kernels are TPU-target)."""
+correctness cross-check; the Pallas kernels are TPU-target).
+
+The dense-gather vs ragged-paged attention comparison reports both wall time
+and *bytes touched* (analytic: the dense path reads every row padded to
+S_max, the paged path reads whole pages up to each row's length). With
+``--json`` the rows land in BENCH_kernels.json so CI records the perf
+trajectory; ``--smoke`` shrinks shapes for the CI lane.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+from repro.kernels.paged_attention import tokens_touched
 from repro.models.flash_xla import flash_sdpa
 
 
@@ -23,12 +34,17 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(print_fn=print):
+def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
     print_fn("kernel,us_per_call,derived")
+    records = []
+
+    def record(name, us, **extra):
+        records.append(dict(kernel=name, us_per_call=us, **extra))
+
     rng = jax.random.PRNGKey(0)
     ks = jax.random.split(rng, 4)
 
-    B, S, H, KV, d = 1, 1024, 8, 2, 64
+    B, S, H, KV, d = 1, (256 if smoke else 1024), 8, 2, 64
     q = jax.random.normal(ks[0], (B, S, H, d), jnp.float32)
     k = jax.random.normal(ks[1], (B, S, KV, d), jnp.float32)
     v = jax.random.normal(ks[2], (B, S, KV, d), jnp.float32)
@@ -37,29 +53,62 @@ def run(print_fn=print):
         q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)))
     us = _time(f_ref, q, k, v)
     flops = 4 * B * H * S * S * d / 2
-    print_fn(f"attention_xla_ref_1k,{us:.0f},{flops/us*1e-3:.1f}GFLOP/s_cpu")
+    print_fn(f"attention_xla_ref_{S},{us:.0f},{flops/us*1e-3:.1f}GFLOP/s_cpu")
+    record("attention_xla_ref", us, gflops_cpu=flops / us * 1e-3)
 
     qp = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
     f_flash = jax.jit(lambda q, k, v: flash_sdpa(q, (k, v), qp, jnp.arange(S),
                                                  scale=d**-0.5, block_q=256, block_k=256))
     us = _time(f_flash, q, k, v)
-    print_fn(f"flash_xla_blocked_1k,{us:.0f},{flops/us*1e-3:.1f}GFLOP/s_cpu")
+    print_fn(f"flash_xla_blocked_{S},{us:.0f},{flops/us*1e-3:.1f}GFLOP/s_cpu")
+    record("flash_xla_blocked", us, gflops_cpu=flops / us * 1e-3)
 
-    # decode attention: 32 requests x 8K KV
-    Bd, Sd = 32, 8192
-    qd = jax.random.normal(ks[0], (Bd, 1, H, d), jnp.float32)
+    # ------------------------------------------------------------------
+    # dense-gather vs ragged paged decode attention at mixed lengths
+    # (lengths << S_max: the serving regime the packed engine lives in)
+    # ------------------------------------------------------------------
+    Bd, Sd, page = (8, 1024, 64) if smoke else (32, 8192, 128)
+    kv_elt_bytes = 4  # fp32 pools here
+    qd = jax.random.normal(ks[0], (Bd, H, d), jnp.float32)
     kd = jax.random.normal(ks[1], (Bd, Sd, KV, d), jnp.float32)
     vd = jax.random.normal(ks[2], (Bd, Sd, KV, d), jnp.float32)
-    lens = jnp.full((Bd,), Sd, jnp.int32)
-    f_dec = jax.jit(lambda q, k, v, l: ref.decode_attention_ref(
-        q[:, 0].reshape(Bd, KV, H // KV, d), k.transpose(0, 2, 1, 3),
+    # mixed ragged lengths, mean ~Sd/8 — far below the padded extent
+    lens_np = np.linspace(page // 2, Sd // 4, Bd).astype(np.int32)
+    lengths = jnp.asarray(lens_np)
+
+    f_dense = jax.jit(lambda q, k, v, l: ref.decode_attention_ref(
+        q.reshape(Bd, KV, H // KV, d), k.transpose(0, 2, 1, 3),
         v.transpose(0, 2, 1, 3), l))
-    us = _time(f_dec, qd, kd, vd, lens)
-    kv_gb = Bd * Sd * KV * d * 2 * 4 / 1e9
-    print_fn(f"decode_attention_ref_32x8k,{us:.0f},{kv_gb/ (us*1e-6):.1f}GB/s_cpu")
+    us_dense = _time(f_dense, qd, kd, vd, lengths)
+    dense_tokens = Bd * Sd
+    dense_bytes = dense_tokens * KV * d * 2 * kv_elt_bytes  # k + v
+    print_fn(f"attn_dense_gather_{Bd}x{Sd//1024}k,{us_dense:.0f},"
+             f"{dense_bytes/(us_dense*1e-6)/1e9:.1f}GB/s_cpu")
+
+    # paged path: pool view + identity tables bounded to the live context
+    pps = Sd // page
+    pool_k = kd.reshape(Bd * pps, page, KV, d)
+    pool_v = vd.reshape(Bd * pps, page, KV, d)
+    nb = int(-(-int(lens_np.max()) // page))
+    tables = jnp.asarray(
+        (np.arange(Bd)[:, None] * pps + np.arange(nb)[None, :]).astype(np.int32))
+    f_paged = jax.jit(lambda q, pk, pv, l, t: ops.paged_attention_rows(q, pk, pv, l, t))
+    us_paged = _time(f_paged, qd, pool_k, pool_v, lengths, tables)
+    ragged_tokens = tokens_touched(lens_np.tolist(), page)
+    ragged_bytes = ragged_tokens * KV * d * 2 * kv_elt_bytes
+    print_fn(f"attn_ragged_paged_{Bd}x{Sd//1024}k,{us_paged:.0f},"
+             f"bytes_ratio={ragged_bytes/dense_bytes:.3f}")
+    assert ragged_bytes < dense_bytes, "ragged path must touch fewer bytes"
+    record("attn_dense_gather", us_dense,
+           tokens_per_s=dense_tokens / (us_dense * 1e-6),
+           kv_tokens_read=dense_tokens, bytes_touched=dense_bytes)
+    record("attn_ragged_paged", us_paged,
+           tokens_per_s=ragged_tokens / (us_paged * 1e-6),
+           kv_tokens_read=ragged_tokens, bytes_touched=ragged_bytes,
+           bytes_vs_dense=ragged_bytes / dense_bytes)
 
     # SSD chunk scan
-    Bs, Ss, nh, hd, G, ds = 2, 2048, 8, 32, 1, 32
+    Bs, Ss, nh, hd, G, ds = 2, (512 if smoke else 2048), 8, 32, 1, 32
     x = jax.random.normal(ks[0], (Bs, Ss, nh, hd), jnp.float32)
     dt = jax.nn.softplus(jax.random.normal(ks[1], (Bs, Ss, nh)))
     A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
@@ -68,7 +117,8 @@ def run(print_fn=print):
     from repro.models.mamba import ssd_chunked
     f_ssd = jax.jit(lambda x, dt, Bm, Cm: ssd_chunked(x, dt, A, Bm, Cm))
     us = _time(f_ssd, x, dt, Bm, Cm)
-    print_fn(f"ssd_chunked_xla_2k,{us:.0f},{Bs*Ss/(us*1e-6)/1e6:.2f}Mtok/s_cpu")
+    print_fn(f"ssd_chunked_xla_{Ss},{us:.0f},{Bs*Ss/(us*1e-6)/1e6:.2f}Mtok/s_cpu")
+    record("ssd_chunked_xla", us, mtok_per_s_cpu=Bs * Ss / (us * 1e-6) / 1e6)
 
     # interpret-mode cross-checks (Pallas kernel == oracle), small shapes
     out = ops.flash_attention_bshd(q[:, :256], k[:, :256], v[:, :256],
@@ -78,8 +128,25 @@ def run(print_fn=print):
         v[:, :256].transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
     err = float(jnp.max(jnp.abs(out - expect)))
     print_fn(f"pallas_flash_interpret_check,0,max_err={err:.2e}")
+
+    out = ops.paged_attention_rows(
+        qd[:4], pool_k, pool_v, lengths[:4], tables[:4], interpret=True)
+    expect = ops.paged_attention_rows(qd[:4], pool_k, pool_v, lengths[:4], tables[:4])
+    err_p = float(jnp.max(jnp.abs(out - expect)))
+    print_fn(f"pallas_paged_interpret_check,0,max_err={err_p:.2e}")
+    assert err_p < 2e-5
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"smoke": smoke, "kernels": records}, f, indent=2)
+        print_fn(f"# wrote {json_path}")
     return True
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny shapes (CI lane)")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="also write records to this JSON file")
+    a = ap.parse_args()
+    run(smoke=a.smoke, json_path=a.json_path)

@@ -13,11 +13,21 @@ Works for attention-family architectures (incl. MLA). SSM/hybrid mixers need
 contiguous per-segment scans, so those archs use the engine's two-call mode
 (their decode is state-recurrent and not KV-bound — DESIGN.md §4).
 
-The gather `cache[slots]` is the CPU-scale correctness realization; on TPU
-the same schedule maps to kernels/decode_attention.py + flash_attention.py.
+Two attention realizations over the scattered cache:
+  * dense gather (``block_tables=None``) — `cache[slots]` pulls every row's
+    full padded KV extent and softmaxes over all of ``max_len``: O(N * S_max)
+    bytes/FLOPs regardless of real lengths. Kept as reference/fallback.
+  * ragged paged (``block_tables`` given) — the cache is viewed as a page
+    pool of ``page_size``-token pages; each row reads only the pages its
+    block-table row names, bounded to the live context (the engine passes
+    tables already sliced to ``nb = ceil(max_live_len / page_size)``
+    columns), and attends up to its own position: O(N * len). On TPU this is
+    kernels/paged_attention.py (out-of-range pages are skipped per row); on
+    CPU the jnp oracle gathers the same bounded page set.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -34,12 +44,38 @@ def supports_packed(cfg: ModelConfig) -> bool:
     return (not cfg.encdec) and all(s.mixer == "attn" for s in cfg.layer_specs)
 
 
+@dataclasses.dataclass
+class PagedView:
+    """Ragged paged-attention inputs for one packed step.
+
+    ``block_tables`` is the engine's device mirror of the allocator's block
+    tables — one row per cache slot (incl. the scratch slot), already sliced
+    to ``nb`` columns where ``nb * page_size`` covers the longest live
+    context this step. Dead entries point at a valid scratch page."""
+
+    block_tables: jax.Array  # (n_slots+1, nb) int32 physical page ids
+    page_size: int
+    use_kernel: bool = False  # Pallas kernel (TPU) vs jnp oracle (CPU)
+    interpret: bool = False
+
+    def pool(self, c: jax.Array) -> jax.Array:
+        """Free reshape of a dense (B, S, ...) slot cache into its page-pool
+        view (B * S/page, page, ...)."""
+        B, S = c.shape[0], c.shape[1]
+        return c.reshape((B * S // self.page_size, self.page_size) + c.shape[2:])
+
+    def row_tables(self, slots: jax.Array) -> jax.Array:
+        """Per-row tables: each packed row inherits its slot's table."""
+        return self.block_tables[slots]
+
+
 # ---------------------------------------------------------------------------
 # packed attention over gathered cache rows
 # ---------------------------------------------------------------------------
 
 
-def _packed_gqa(p, cfg: ModelConfig, spec: LayerSpec, x, slots, positions, cache, inv_freq):
+def _packed_gqa(p, cfg: ModelConfig, spec: LayerSpec, x, slots, positions, cache, inv_freq,
+                paged: Optional["PagedView"] = None):
     N, _ = x.shape
     hd = cfg.head_dim
     q = dense(p["wq"], x).reshape(N, 1, cfg.n_heads, hd)
@@ -57,9 +93,24 @@ def _packed_gqa(p, cfg: ModelConfig, spec: LayerSpec, x, slots, positions, cache
     cv = cache["v"].at[slots, positions].set(v.astype(cache["v"].dtype))
     new_cache = {"k": ck, "v": cv}
 
-    S = ck.shape[1]
     KV = cfg.n_kv_heads
     G = cfg.n_heads // KV
+    window = cfg.local_window if spec.attn_kind == "local" else None
+    if paged is not None:
+        # ragged block-table path: rows read only their own pages, up to
+        # their own position — O(N * len) instead of O(N * S_max)
+        from repro.kernels.paged_attention import ragged_paged_attention
+
+        o = ragged_paged_attention(
+            q.reshape(N, KV, G, hd).astype(x.dtype),
+            paged.pool(ck), paged.pool(cv),
+            positions + 1, paged.row_tables(slots),
+            window=window, softcap=cfg.attn_logit_softcap,
+            use_kernel=paged.use_kernel, interpret=paged.interpret,
+        ).reshape(N, cfg.n_heads * hd)
+        return dense(p["wo"], o), new_cache
+
+    S = ck.shape[1]
     kc = ck[slots].astype(x.dtype)  # (N,S,KV,hd)
     vc = cv[slots].astype(x.dtype)
     qg = q.reshape(N, KV, G, hd)
@@ -67,15 +118,16 @@ def _packed_gqa(p, cfg: ModelConfig, spec: LayerSpec, x, slots, positions, cache
     s = softcap(s, cfg.attn_logit_softcap)
     k_pos = jnp.arange(S)[None, :]
     ok = k_pos <= positions[:, None]
-    if spec.attn_kind == "local" and cfg.local_window is not None:
-        ok &= k_pos > positions[:, None] - cfg.local_window
+    if window is not None:
+        ok &= k_pos > positions[:, None] - window
     s = jnp.where(ok[:, None, None, :], s, NEG_INF)
     probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     o = jnp.einsum("nkgs,nskh->nkgh", probs, vc).reshape(N, cfg.n_heads * hd)
     return dense(p["wo"], o), new_cache
 
 
-def _packed_mla(p, cfg: ModelConfig, x, slots, positions, cache, inv_freq):
+def _packed_mla(p, cfg: ModelConfig, x, slots, positions, cache, inv_freq,
+                paged: Optional["PagedView"] = None):
     from repro.models.attention import _mla_qkv_rope  # same math, (N,1) shaped
 
     N, _ = x.shape
@@ -90,15 +142,26 @@ def _packed_mla(p, cfg: ModelConfig, x, slots, positions, cache, inv_freq):
     cr = cache["krope"].at[slots, positions].set(krope.astype(cache["krope"].dtype))
     new_cache = {"ckv": cc, "krope": cr}
 
-    S = cc.shape[1]
     w_up = p["kv_up"]["w"].reshape(cfg.kv_lora_rank, H, nope + vh)
     w_uk, w_uv = w_up[..., :nope], w_up[..., nope:]
     q_eff = jnp.einsum("nhp,lhp->nhl", q_nope, w_uk.astype(x.dtype))
-    c = cc[slots].astype(x.dtype)  # (N,S,L)
-    kr = cr[slots].astype(x.dtype)  # (N,S,rope)
+    if paged is not None:
+        # ragged block-table gather of the latent cache, bounded to the live
+        # context (nb pages) — the MLA analogue of the paged GQA kernel path
+        tabs = paged.row_tables(slots)  # (N, nb)
+        nb = tabs.shape[1]
+        Sr = nb * paged.page_size
+        c = paged.pool(cc)[tabs].reshape(N, Sr, cfg.kv_lora_rank).astype(x.dtype)
+        kr = paged.pool(cr)[tabs].reshape(N, Sr, rope).astype(x.dtype)
+        k_pos = jnp.arange(Sr)[None, :]
+    else:
+        Sr = cc.shape[1]
+        c = cc[slots].astype(x.dtype)  # (N,S,L)
+        kr = cr[slots].astype(x.dtype)  # (N,S,rope)
+        k_pos = jnp.arange(Sr)[None, :]
     s = jnp.einsum("nhl,nsl->nhs", q_eff, c) + jnp.einsum("nhr,nsr->nhs", q_rope, kr)
     s = s.astype(jnp.float32) * scale
-    ok = jnp.arange(S)[None, :] <= positions[:, None]
+    ok = k_pos <= positions[:, None]
     s = jnp.where(ok[:, None, :], s, NEG_INF)
     probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     o_lat = jnp.einsum("nhs,nsl->nhl", probs, c)
@@ -106,12 +169,14 @@ def _packed_mla(p, cfg: ModelConfig, x, slots, positions, cache, inv_freq):
     return dense(p["wo"], o), new_cache
 
 
-def _packed_layer(p, cfg, spec, x, slots, positions, cache, inv_freq):
+def _packed_layer(p, cfg, spec, x, slots, positions, cache, inv_freq, paged=None):
     hn = rms_norm(p["norm1"], x, cfg.norm_eps)
     if cfg.mla:
-        y, new_cache = _packed_mla(p["mixer"], cfg, hn, slots, positions, cache, inv_freq)
+        y, new_cache = _packed_mla(p["mixer"], cfg, hn, slots, positions, cache, inv_freq,
+                                   paged=paged)
     else:
-        y, new_cache = _packed_gqa(p["mixer"], cfg, spec, hn, slots, positions, cache, inv_freq)
+        y, new_cache = _packed_gqa(p["mixer"], cfg, spec, hn, slots, positions, cache, inv_freq,
+                                   paged=paged)
     if cfg.post_norm:
         y = rms_norm(p["post_norm1"], y, cfg.norm_eps)
     x = x + y
@@ -128,11 +193,16 @@ def _packed_layer(p, cfg, spec, x, slots, positions, cache, inv_freq):
     return x, new_cache
 
 
-def packed_step(model: Model, params, cache, tokens, slots, positions):
+def packed_step(model: Model, params, cache, tokens, slots, positions,
+                paged: Optional[PagedView] = None):
     """tokens/slots/positions: (N,) -> (logits (N, vocab), new cache).
 
     Padding rows point at a scratch slot (engine allocates one extra cache
     row); their outputs are ignored by the caller.
+
+    With ``paged`` set, attention runs the ragged block-table path (each row
+    attends up to its own position through its slot's page table); otherwise
+    the dense ``cache[slots]`` gather.
     """
     cfg = model.cfg
     assert supports_packed(cfg), cfg.name
@@ -144,7 +214,7 @@ def packed_step(model: Model, params, cache, tokens, slots, positions):
     for i in range(cfg.n_prefix_layers):
         x, nc = _packed_layer(
             params["stack"]["prefix"][i], cfg, cfg.layer_specs[i], x, slots, positions,
-            cache["prefix"][i], model.inv_freq,
+            cache["prefix"][i], model.inv_freq, paged=paged,
         )
         new_prefix.append(nc)
 
@@ -154,7 +224,7 @@ def packed_step(model: Model, params, cache, tokens, slots, positions):
         for i in range(cfg.scan_period):
             x, nc = _packed_layer(
                 p_period[str(i)], cfg, cfg.period_specs[i], x, slots, positions,
-                cache_period[str(i)], model.inv_freq,
+                cache_period[str(i)], model.inv_freq, paged=paged,
             )
             new_cache[str(i)] = nc
         return x, new_cache

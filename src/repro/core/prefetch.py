@@ -85,11 +85,20 @@ class PrefetchPlan:
 
 class PrefetchPlanner:
     def __init__(self, model_cfg: ModelConfig, buffer_bytes: int,
-                 mem: Optional[KVMemoryManager] = None):
+                 mem: Optional[KVMemoryManager] = None, block_size: int = 1):
         self.cfg = model_cfg
         self.buffer_bytes = int(buffer_bytes)
         self.kv_btl = model_cfg.kv_bytes_per_token_layer
         self.mem = mem
+        # demand granularity: the ragged paged kernel reads whole KV blocks,
+        # so prefetch demand is each context rounded up to blocks — the
+        # bytes the next attention op actually touches (block_size=1 ==
+        # exact token pricing, the PR 1 semantics)
+        self.block_size = mem.block_size if mem is not None else max(block_size, 1)
+
+    def _touched(self, tokens: int) -> int:
+        bs = self.block_size
+        return bs * -(-tokens // bs)
 
     def plan(self, ctx_lens: Dict[int, int], finishing: Iterable[int] = (),
              priorities: Optional[Dict[int, int]] = None) -> PrefetchPlan:
@@ -104,27 +113,28 @@ class PrefetchPlanner:
         if self.kv_btl == 0:  # attention-free arch: nothing to prefetch
             return PrefetchPlan(self.buffer_bytes, 0, {r: 0 for r in ctx_lens},
                                 total_tokens=0)
+        touched = {r: self._touched(t) for r, t in ctx_lens.items()}
         if self.mem is not None and self.mem.tiers.capacity_bytes > 0:
-            return self._plan_tiered(ctx_lens, fin, priorities)
+            return self._plan_tiered(ctx_lens, touched, fin, priorities)
         budget = self.buffer_bytes // self.kv_btl  # tokens that fit (one layer)
         resident: Dict[int, int] = {}
         for rid in sorted(ctx_lens, key=lambda r: (r in fin, -ctx_lens[r])):
-            take = min(ctx_lens[rid], budget)
+            take = min(touched[rid], budget)
             resident[rid] = take
             budget -= take
         return PrefetchPlan(
-            self.buffer_bytes, self.kv_btl, resident, sum(ctx_lens.values()),
+            self.buffer_bytes, self.kv_btl, resident, sum(touched.values()),
             finishing_tokens=sum(resident[r] for r in fin if r in resident),
         )
 
-    def _plan_tiered(self, ctx_lens: Dict[int, int], fin: set,
-                     priorities: Optional[Dict[int, int]]) -> PrefetchPlan:
+    def _plan_tiered(self, ctx_lens: Dict[int, int], touched: Dict[int, int],
+                     fin: set, priorities: Optional[Dict[int, int]]) -> PrefetchPlan:
         """Block-granular residency over the BEOL tier's placement policy."""
         mem = self.mem
         placement = mem.place_beol(ctx_lens, finishing=fin, priorities=priorities)
         bs = mem.block_size
         resident = {
-            r: min(ctx_lens[r], placement.desired_blocks.get(r, 0) * bs)
+            r: min(touched[r], placement.desired_blocks.get(r, 0) * bs)
             for r in ctx_lens
         }
         retained_tok = {
@@ -132,7 +142,7 @@ class PrefetchPlanner:
             for r in ctx_lens
         }
         return PrefetchPlan(
-            self.buffer_bytes, self.kv_btl, resident, sum(ctx_lens.values()),
+            self.buffer_bytes, self.kv_btl, resident, sum(touched.values()),
             finishing_tokens=sum(resident[r] for r in fin if r in resident),
             retained_bytes=sum(retained_tok[r] for r in ctx_lens if r not in fin)
             * self.kv_btl,

@@ -39,6 +39,7 @@ from repro.configs.base import ModelConfig
 from repro.core.prefetch import PrefetchPlan, PrefetchPlanner
 from repro.memory.manager import KVMemoryManager
 from repro.serving.request import Request, State
+from repro.sim.opcost import kv_tokens_touched
 
 POLICIES = ("fcfs", "sjf", "priority")
 PREEMPTION_MODES = ("recompute", "swap")
@@ -128,6 +129,17 @@ class StepPlan:
         return self.total_tokens == 0
 
 
+def _blocks_prefix_sum(a: int, b: int, bs: int) -> int:
+    """sum_{t=a+1..b} ceil(t / bs): cumulative blocks a run of rows at
+    positions a..b-1 touches (the row at position p attends p+1 keys)."""
+
+    def f(t: int) -> int:
+        q, r = divmod(t, bs)
+        return bs * q * (q + 1) // 2 + r * (q + 1)
+
+    return f(b) - f(a)
+
+
 @dataclasses.dataclass
 class SchedStats:
     """Aggregate counters surfaced into service metrics."""
@@ -141,12 +153,22 @@ class SchedStats:
     swap_outs: int = 0
     swap_ins: int = 0
     swapped_out_tokens: int = 0  # KV tokens spilled to host (no recompute debt)
+    # ragged-attention accounting: KV key tokens the block-granular paged
+    # path actually reads vs what a padded dense-gather batch would read
+    attn_tokens_touched: int = 0
+    attn_tokens_padded: int = 0
 
     def packing_efficiency(self, chunk_size: int) -> float:
         """Scheduled tokens / chunk budget — 1.0 means every step was full."""
         if self.steps == 0:
             return float("nan")
         return self.scheduled_tokens / (self.steps * chunk_size)
+
+    def attn_padding_savings(self) -> float:
+        """Fraction of padded attention reads the ragged path avoids."""
+        if self.attn_tokens_padded == 0:
+            return float("nan")
+        return 1.0 - self.attn_tokens_touched / self.attn_tokens_padded
 
 
 class Scheduler:
@@ -170,6 +192,10 @@ class Scheduler:
         self.swapped: List[Request] = []  # swap-out order (oldest first)
         self.requests: Dict[int, Request] = {}
         self.stats = SchedStats()
+        # dense-gather padding extent (engine sets this to its max_len); when
+        # None, padding is measured against the step's longest row — what a
+        # rectangular batch kernel would read
+        self.padded_len: Optional[int] = None
 
     # ------------------------------------------------------------------ API
     def add_request(self, req: Request) -> None:
@@ -336,6 +362,24 @@ class Scheduler:
                 finishing.append(seg.rid)
         prios = {r: self.requests[r].priority for r in ctx}
         plan.prefetch = self.planner.plan(ctx, finishing=finishing, priorities=prios)
+
+        # ragged-attention accounting: the paged path reads whole blocks up
+        # to each row's own length; the dense gather reads every row padded
+        # to `padded_len` (engine: max_len; sim: the step's longest row)
+        bs = self.mem.block_size
+        decode_lens = [self.requests[r].context_len for r in plan.decode_rids]
+        touched = kv_tokens_touched(decode_lens, bs)  # new token's pos + 1
+        max_row = max(decode_lens, default=1)
+        for seg in plan.prefill_segments:
+            touched += bs * _blocks_prefix_sum(seg.start, seg.start + seg.length, bs)
+            max_row = max(max_row, seg.start + seg.length)
+        rows = len(plan.decode_slots) + plan.total_prefill_tokens
+        self.stats.attn_tokens_touched += touched
+        # baseline at the same block granularity as `touched` (a rectangular
+        # gather over the paged pool reads whole blocks too), so savings are
+        # never negative and sim/engine numbers are comparable
+        pad = self.padded_len if self.padded_len is not None else max_row
+        self.stats.attn_tokens_padded += rows * (bs * -(-pad // bs))
 
         self.stats.steps += 1
         self.stats.scheduled_tokens += plan.total_tokens

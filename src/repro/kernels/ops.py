@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ssd as _ssd
 
 
@@ -61,6 +62,23 @@ def decode_attention_bhd(
         window=window, softcap=softcap, block_k=bk, interpret=interpret,
     )
     return o.reshape(B, 1, H, d)
+
+
+def paged_attention_rows(
+    q, k_pages, v_pages, lengths, block_tables,
+    *, window=None, softcap=None, use_kernel=False, interpret=False,
+):
+    """Packed-row layout wrapper: q (N,H,d) + page pool (P,page,KV,d),
+    per-row lengths (N,) and block tables (N,nb) -> (N,H,d)."""
+    N, H, d = q.shape
+    KV = k_pages.shape[2]
+    G = H // KV
+    qg = q.reshape(N, KV, G, d)
+    o = _pa.ragged_paged_attention(
+        qg, k_pages, v_pages, lengths.astype(jnp.int32), block_tables,
+        window=window, softcap=softcap, use_kernel=use_kernel, interpret=interpret,
+    )
+    return o.reshape(N, H, d)
 
 
 def ssd(x, dt, A, Bm, Cm, h0=None, *, chunk=_ssd.DEFAULT_CHUNK, interpret=False):

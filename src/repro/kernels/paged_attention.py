@@ -1,0 +1,188 @@
+"""Ragged block-table (paged) attention Pallas kernel for the packed step.
+
+The serving engine's packed step mixes decode tokens and prefill-chunk tokens
+in one flat row set; every row attends over its *own* context prefix. The
+dense-gather realization (`cache[slots]` in core/packed_step.py) reads
+O(N * S_max) KV bytes regardless of the rows' actual lengths. This kernel is
+the vLLM-style paged counterpart: KV lives in a page pool, each row names its
+pages through a block table, and per-row `lengths` arrive via scalar prefetch
+so whole out-of-range pages are skipped — attention cost scales with the
+tokens a row actually owns, not with the padded cache extent.
+
+Layouts (one flat row per query token, grouped-query heads):
+  q:            (N, KV, G, d)      one query per packed row
+  k/v_pages:    (P, page, KV, d)   page pool; the engine derives it from the
+                                   dense slot cache by a free reshape
+  lengths:      (N,) int32         keys row n may attend (<= nb * page)
+  block_tables: (N, nb) int32      per-row page ids, logical order; entries
+                                   past ceil(length/page) must still be valid
+                                   page ids (the engine points them at a
+                                   scratch page) because index maps run even
+                                   for skipped grid steps
+
+Grid is (N, KV, nb); the last dimension streams pages with Mosaic's software
+pipeline double-buffering page ib+1's DMA under page ib's compute, exactly
+like kernels/decode_attention.py — plus the block-table indirection in the
+index map (scalar-prefetched, so the DMA address is known before the grid
+step runs). `pl.when` guards skip compute AND the online-softmax update for
+pages past a row's length (and, with `window`, pages wholly below it).
+
+`ragged_paged_attention` dispatches to the kernel (TPU / interpret) or to the
+pure-jnp oracle `kernels.ref.paged_attention_ref` (CPU serving + CI).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
+
+NEG_INF = -1.0e30
+LANES = 128
+
+
+def tokens_touched(lengths, page: int) -> int:
+    """Key tokens a block-granular ragged kernel actually reads:
+    sum_i ceil(len_i / page) * page. The dense-gather path reads
+    len(lengths) * S_max instead. (Single source of truth lives in
+    sim/opcost so kernel, scheduler, and simulator price identically.)"""
+    from repro.sim.opcost import kv_tokens_touched
+
+    return kv_tokens_touched(lengths, page)
+
+
+def _paged_kernel(
+    lengths_ref,  # scalar prefetch (N,)
+    tables_ref,  # scalar prefetch (N, nb)
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale, window, softcap_val, page,
+):
+    n = pl.program_id(0)
+    ib = pl.program_id(2)
+    nb = pl.num_programs(2)
+    length = lengths_ref[n]
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ib * page  # logical key position of this page's first slot
+    run = k_start < length
+    if window is not None:
+        run &= k_start + page > length - window
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (page, d)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, page)
+        if softcap_val is not None:
+            s = softcap_val * jnp.tanh(s / softcap_val)
+
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < length
+        if window is not None:
+            mask &= k_pos > length - 1 - window  # query position = length-1
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask.astype(jnp.float32)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to(alpha * l_prev + jnp.sum(p, 1, keepdims=True), l_ref.shape)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ib == nb - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-37)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "interpret"))
+def paged_attention(
+    q, k_pages, v_pages, lengths, block_tables,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+):
+    """q: (N, KV, G, d); k/v_pages: (P, page, KV, d); lengths: (N,);
+    block_tables: (N, nb) -> (N, KV, G, d)."""
+    N, KV, G, d = q.shape
+    page = k_pages.shape[1]
+    nb = block_tables.shape[1]
+    scale = 1.0 / d**0.5
+    grid = (N, KV, nb)
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, window=window, softcap_val=softcap, page=page
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            # index maps receive the scalar-prefetch refs as trailing args;
+            # the k/v maps read the block table — the paged indirection
+            pl.BlockSpec((1, 1, G, d), lambda n, h, ib, lens, tabs: (n, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda n, h, ib, lens, tabs: (tabs[n, ib], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda n, h, ib, lens, tabs: (tabs[n, ib], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d), lambda n, h, ib, lens, tabs: (n, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, d), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="paged_attention",
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), q, k_pages, v_pages)
+
+
+def ragged_paged_attention(
+    q, k_pages, v_pages, lengths, block_tables,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    use_kernel: bool = False,
+    interpret: bool = False,
+):
+    """Dispatch: Pallas kernel on TPU (or interpret mode), jnp oracle on CPU.
+
+    The oracle gathers exactly the pages the tables name (O(N * nb * page)
+    bytes — the caller bounds nb to the live context, not S_max), so even the
+    fallback's attention cost scales with real tokens.
+    """
+    if use_kernel or interpret:
+        return paged_attention(
+            q, k_pages, v_pages, lengths, block_tables,
+            window=window, softcap=softcap, interpret=interpret,
+        )
+    from repro.kernels.ref import paged_attention_ref
+
+    return paged_attention_ref(
+        q, k_pages, v_pages, lengths, block_tables, window=window, softcap=softcap
+    )

@@ -53,6 +53,35 @@ def decode_attention_ref(
     return jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_attention_ref(
+    q, k_pages, v_pages, lengths, block_tables,
+    *, window: Optional[int] = None, softcap: Optional[float] = None,
+):
+    """q: (N,KV,G,d); k/v_pages: (P,page,KV,d); lengths (N,);
+    block_tables (N,nb) -> (N,KV,G,d).
+
+    Gathers each row's pages in block-table order (logical key position
+    ib*page + offset), masks keys at/above the row's length, fp32 softmax.
+    The last valid page may be partially filled; entries past
+    ceil(length/page) are never read into the result (fully masked)."""
+    N, KV, G, d = q.shape
+    page = k_pages.shape[1]
+    nb = block_tables.shape[1]
+    S = nb * page
+    kc = k_pages[block_tables].reshape(N, S, KV, d).astype(jnp.float32)
+    vc = v_pages[block_tables].reshape(N, S, KV, d).astype(jnp.float32)
+    s = jnp.einsum("nkgd,nskd->nkgs", q.astype(jnp.float32), kc) / d**0.5
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(S)[None, :]
+    mask = k_pos < lengths[:, None]  # (N, S)
+    if window is not None:
+        mask &= k_pos > (lengths[:, None] - 1) - window  # query pos = length-1
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("nkgs,nskd->nkgd", p, vc).astype(q.dtype)
+
+
 def ssd_ref(x, dt, A, Bm, Cm, h0=None):
     """Sequential (exact) SSD recurrence oracle.
 

@@ -38,6 +38,9 @@ def main():
                     help="drop-and-re-prefill vs spill-to-host preemption")
     ap.add_argument("--kv-block", type=int, default=1,
                     help="paged KV block size in tokens")
+    ap.add_argument("--attn-kernel", choices=["auto", "paged", "dense"], default="auto",
+                    help="packed attention path: ragged block-table (paged) "
+                         "vs dense cache gather")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -52,7 +55,7 @@ def main():
         max_concurrent_prefills=args.max_prefills, policy=args.policy,
         kv_capacity_tokens=args.kv_capacity, preemption=args.preemption,
         kv_block_size=args.kv_block),
-        max_len=args.max_len)
+        max_len=args.max_len, attn_kernel=args.attn_kernel)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         L = int(rng.integers(8, args.max_len // 2))
@@ -61,12 +64,19 @@ def main():
     eng.run(max_steps=5000)
     m = summarize(eng.scheduler.requests.values(), horizon=float(max(eng.steps_run, 1)),
                   sched_stats=eng.scheduler.stats, chunk_size=args.chunk)
+    # savings are *realized* only when the ragged paged path actually ran;
+    # otherwise the number is what it would have saved
+    ragged = eng.packed_mode and eng.attn_kernel == "paged"
+    savings = (f"{m['attn_padding_savings']:.2f}" if ragged
+               else f"n/a(would_save={m['attn_padding_savings']:.2f})")
     print(f"[launch.serve] mode={'packed' if eng.packed_mode else 'two_call'} "
+          f"attn={eng.attn_kernel} "
           f"policy={args.policy} steps={eng.steps_run} "
           f"completed={m['completed']}/{m['submitted']} "
           f"pack_eff={m['packing_efficiency']:.2f} "
           f"preemptions={int(m['preemptions'])} "
           f"swaps={int(m['swap_outs'])} "
+          f"attn_savings={savings} "
           f"prefetch_cov={np.mean(eng.prefetch_log):.2f}")
 
 

@@ -8,6 +8,15 @@ Two execution modes:
     SSM/hybrid and encoder-decoder archs whose mixers need contiguous
     per-segment scans.
 
+Packed attention runs the **ragged paged path by default**
+(``attn_kernel="paged"``): the engine mirrors the block allocator's tables
+into a device-resident ``(n_slots+1, max_blocks)`` int32 array
+(``block_mirror``), re-synced every step across alloc/free/swap/preemption,
+and ``packed_step`` attends through it — each row reads only its own pages
+up to its own position (kernels/paged_attention.py on TPU, the bounded jnp
+oracle on CPU) instead of the dense ``cache[slots]`` gather over all of
+``max_len``. ``attn_kernel="dense"`` restores the seed's rectangular gather.
+
 Either way the Scheduler (repro.core.scheduler) decides step composition and
 prefetch plans, so service-level behaviour (Figs 7/8) is policy-identical to
 the simulator. Correctness is proven by tests/test_engine.py: packed
@@ -22,11 +31,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packed_step import packed_step, supports_packed
+from repro.core.packed_step import PagedView, packed_step, supports_packed
 from repro.core.scheduler import Scheduler, SchedulerConfig, StepPlan
 from repro.models.model import Model
-from repro.serving import sampling
 from repro.serving.request import Request, State
+
+ATTN_KERNELS = ("auto", "paged", "dense")
 
 
 def _batch_axis(cache_key: str) -> int:
@@ -65,7 +75,10 @@ class Engine:
         max_len: int,
         cache_dtype=jnp.float32,
         eos_id: Optional[int] = None,
+        attn_kernel: str = "auto",
     ):
+        if attn_kernel not in ATTN_KERNELS:
+            raise ValueError(f"unknown attn_kernel {attn_kernel!r}; want one of {ATTN_KERNELS}")
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -73,6 +86,7 @@ class Engine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.scheduler = Scheduler(sched_cfg, model.cfg)
+        self.scheduler.padded_len = max_len  # dense-gather padding extent
         self.packed_mode = supports_packed(model.cfg)
         self.n_slots = sched_cfg.max_decode_batch
         # +1 scratch row for padding tokens in packed mode
@@ -84,12 +98,76 @@ class Engine:
         # keyed by rid (the "host tier" of the memory subsystem)
         self.swap_store: Dict[int, dict] = {}
 
-        if self.packed_mode:
-            self._packed = jax.jit(
-                lambda p, c, t, s, pos: packed_step(model, p, c, t, s, pos)
+        # ragged paged attention is the packed default; it needs the page
+        # size (= allocator block size) to tile max_len exactly
+        self.page_size = sched_cfg.kv_block_size
+        if attn_kernel == "auto":
+            attn_kernel = (
+                "paged" if self.packed_mode and max_len % self.page_size == 0 else "dense"
             )
+        if attn_kernel == "paged" and not (
+            self.packed_mode and max_len % self.page_size == 0
+        ):
+            raise ValueError(
+                "attn_kernel='paged' needs packed mode and max_len divisible "
+                f"by kv_block_size (max_len={max_len}, block={self.page_size})"
+            )
+        self.attn_kernel = attn_kernel
+
+        if self.packed_mode:
+            if self.attn_kernel == "paged":
+                pps = self.pages_per_slot = max_len // self.page_size
+                self._scratch_page = self.n_slots * pps
+                # device mirror of the allocator's block tables: one row per
+                # slot, physical page ids; dead entries -> a scratch page
+                self.block_mirror = np.full(
+                    (self.n_slots + 1, pps), self._scratch_page, np.int32
+                )
+                self.block_mirror[self.n_slots] = self._scratch_page + np.arange(pps)
+                use_pallas = jax.default_backend() == "tpu"
+                page = self.page_size
+                self._packed = jax.jit(
+                    lambda p, c, t, s, pos, bt: packed_step(
+                        model, p, c, t, s, pos,
+                        paged=PagedView(bt, page, use_kernel=use_pallas),
+                    )
+                )
+            else:
+                self._packed = jax.jit(
+                    lambda p, c, t, s, pos: packed_step(model, p, c, t, s, pos)
+                )
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
+        # fused single-call slot movers: one compiled gather/scatter over the
+        # whole cache tree per swapped request (vs per-key dispatches)
+        self._gather_slot = jax.jit(
+            lambda cache, slot: {
+                k: _take_slot(cache[k], slot, _batch_axis(k)) for k in cache
+            }
+        )
+        self._scatter_slot = jax.jit(
+            lambda cache, part, slot: {
+                k: _put_slot(cache[k], part[k], slot, _batch_axis(k)) for k in cache
+            }
+        )
+        # jitted slot zero-reset for two-call re-prefills (slot reuse): the
+        # zeros tree is built inside the compiled call, not rebuilt per use
+        self._reset_slot = jax.jit(
+            lambda cache, slot: {
+                k: _put_slot(
+                    cache[k],
+                    jax.tree.map(
+                        lambda l: jnp.zeros_like(
+                            jax.lax.slice_in_dim(l, 0, 1, axis=_batch_axis(k))
+                        ),
+                        cache[k],
+                    ),
+                    slot,
+                    _batch_axis(k),
+                )
+                for k in cache
+            }
+        )
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request) -> None:
@@ -135,21 +213,21 @@ class Engine:
         """Execute the plan's swap traffic on the slot caches: spilled slots
         copy to host memory (swap_store), restored requests land in their
         new slot before the compute call. Outs run first so a swap-in may
-        reuse a just-freed slot within the same step."""
+        reuse a just-freed slot within the same step. Each direction is one
+        fused compiled call + one host transfer per swapped request."""
         for rid, slot in plan.swapped_out:
-            self.swap_store[rid] = jax.device_get({
-                k: _take_slot(self.cache[k], slot, _batch_axis(k))
-                for k in self.cache
-            })
+            self.swap_store[rid] = jax.device_get(
+                self._gather_slot(self.cache, jnp.int32(slot))
+            )
         for rid, slot in plan.swapped_in:
             saved = self.swap_store.pop(rid)
-            self.cache = {
-                k: _put_slot(self.cache[k], saved[k], slot, _batch_axis(k))
-                for k in self.cache
-            }
+            self.cache = self._scatter_slot(self.cache, saved, jnp.int32(slot))
 
-    def _sample(self, logits_row) -> int:
-        return int(sampling.greedy(logits_row))
+    def _sample_rows(self, logits_rows: np.ndarray) -> np.ndarray:
+        """(rows, vocab) -> (rows,) token ids. The engine's single sampling
+        hook: greedy by default, override for other decoders. All execution
+        paths route their gathered logits rows through here."""
+        return np.argmax(logits_rows, axis=-1)
 
     def _append(self, req: Request, tok: int) -> None:
         req.output.append(tok)
@@ -157,6 +235,45 @@ class Engine:
             req.max_new_tokens = len(req.output)  # force completion
 
     # ---------------------------------------------------------------- packed
+    def _sync_block_mirror(self, plan: StepPlan) -> int:
+        """Re-sync the device block-table mirror from the allocator's tables
+        for this step's active slots. Freed/preempted/swapped-out slots fall
+        back to the scratch page; live slots map their table's blocks (plus
+        the blocks this step's writes will touch — the allocator grows tables
+        in ``complete_step``, *after* the compute) onto their page range.
+        Returns the longest context (tokens) any row touches this step."""
+        m = self.block_mirror
+        pps = self.pages_per_slot
+        page = self.page_size
+        m[:] = self._scratch_page
+        m[self.n_slots] = self._scratch_page + np.arange(pps)
+        sch = self.scheduler
+        need_tokens: Dict[int, int] = {}
+        for slot, rid in zip(plan.decode_slots, plan.decode_rids):
+            need_tokens[slot] = sch.requests[rid].next_decode_pos + 1
+        for seg in plan.prefill_segments:
+            need_tokens[seg.slot] = max(need_tokens.get(seg.slot, 0),
+                                        seg.start + seg.length)
+        tables = sch.mem.allocator.tables
+        for slot, req in sch.active.items():
+            table = tables.get(req.rid)
+            live = table.num_blocks if table is not None else 0
+            need = -(-need_tokens.get(slot, 0) // page)
+            n = min(pps, max(live, need))
+            if n:
+                m[slot, :n] = slot * pps + np.arange(n)
+        return max(need_tokens.values(), default=1)
+
+    def _nb_bucket(self, max_tokens: int) -> int:
+        """Block-table columns for this step: ceil(longest context / page),
+        rounded up to a power of two (bounds jit recompiles as contexts
+        grow), capped at the per-slot page count."""
+        need = -(-max(max_tokens, 1) // self.page_size)
+        nb = 8
+        while nb < need:
+            nb *= 2
+        return min(nb, self.pages_per_slot)
+
     def _run_packed(self, plan: StepPlan) -> None:
         sch = self.scheduler
         N = self.bucket
@@ -181,15 +298,27 @@ class Engine:
                 last_rows[seg.rid] = row + seg.length - 1
             row += seg.length
 
-        logits, self.cache = self._packed(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(slots),
-            jnp.asarray(positions),
-        )
-        logits = np.asarray(logits)
-        for i, rid in enumerate(plan.decode_rids):
-            self._append(sch.requests[rid], self._sample(logits[i]))
-        for rid, r in last_rows.items():
-            self._append(sch.requests[rid], self._sample(logits[r]))
+        if self.attn_kernel == "paged":
+            max_ctx = self._sync_block_mirror(plan)
+            nb = self._nb_bucket(max_ctx)
+            bt = jnp.asarray(self.block_mirror[:, :nb])
+            logits, self.cache = self._packed(
+                self.params, self.cache, jnp.asarray(tokens), jnp.asarray(slots),
+                jnp.asarray(positions), bt,
+            )
+        else:
+            logits, self.cache = self._packed(
+                self.params, self.cache, jnp.asarray(tokens), jnp.asarray(slots),
+                jnp.asarray(positions),
+            )
+        # one device->host transfer of just the sampled rows, then one
+        # vectorized argmax (greedy) over all of them
+        rows = list(range(nd)) + list(last_rows.values())
+        rids = list(plan.decode_rids) + list(last_rows.keys())
+        if rows:
+            picked = np.asarray(logits[jnp.asarray(rows, jnp.int32)])
+            for rid, tok in zip(rids, self._sample_rows(picked)):
+                self._append(sch.requests[rid], int(tok))
 
     # -------------------------------------------------------------- two-call
     def _run_two_call(self, plan: StepPlan) -> None:
@@ -212,30 +341,18 @@ class Engine:
                 k: _mask_tree(new_cache[k], self.cache[k], m, _batch_axis(k))
                 for k in self.cache
             }
-            logits = np.asarray(logits)
-            for slot, rid in zip(plan.decode_slots, plan.decode_rids):
-                self._append(sch.requests[rid], self._sample(logits[slot]))
+            # gather the live slots' logits in one transfer, vectorized argmax
+            picked = np.asarray(logits[jnp.asarray(plan.decode_slots, jnp.int32)])
+            for rid, tok in zip(plan.decode_rids, self._sample_rows(picked)):
+                self._append(sch.requests[rid], int(tok))
 
         for seg in plan.prefill_segments:
             req = sch.requests[seg.rid]
             slot = seg.slot
             if seg.start == 0:
                 # slot reuse / re-prefill after preemption: SSM/conv states
-                # are additive — reset the row
-                self.cache = {
-                    k: _put_slot(
-                        self.cache[k],
-                        jax.tree.map(
-                            lambda l: jnp.zeros_like(
-                                jax.lax.slice_in_dim(l, 0, 1, axis=_batch_axis(k))
-                            ),
-                            self.cache[k],
-                        ),
-                        slot,
-                        _batch_axis(k),
-                    )
-                    for k in self.cache
-                }
+                # are additive — reset the row (single precompiled call)
+                self.cache = self._reset_slot(self.cache, jnp.int32(slot))
             chunk = req.prefill_slice(seg.start, seg.length)
             batch = {"tokens": jnp.asarray(np.asarray(chunk, np.int32)[None])}
             if self.cfg.encdec:
@@ -254,4 +371,4 @@ class Engine:
                 k: _put_slot(self.cache[k], sub[k], slot, _batch_axis(k)) for k in self.cache
             }
             if seg.finishes:
-                self._append(req, self._sample(np.asarray(logits)[0]))
+                self._append(req, int(self._sample_rows(np.asarray(logits)[:1])[0]))

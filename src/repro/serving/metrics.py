@@ -49,6 +49,14 @@ def summarize(requests: Iterable[Request], horizon: float,
         m["swap_outs"] = float(sched_stats.swap_outs)
         m["swap_ins"] = float(sched_stats.swap_ins)
         m["swapped_out_tokens"] = float(sched_stats.swapped_out_tokens)
+        # ragged-attention accounting: block-rounded KV tokens vs the padded
+        # dense-gather reads. In the simulator this is the pricing basis
+        # (always realized); in the engine it is realized only when the
+        # paged path ran (Engine.attn_kernel == "paged") — otherwise it is
+        # the savings the ragged path would have delivered
+        m["attn_tokens_touched"] = float(sched_stats.attn_tokens_touched)
+        m["attn_tokens_padded"] = float(sched_stats.attn_tokens_padded)
+        m["attn_padding_savings"] = sched_stats.attn_padding_savings()
         if chunk_size is not None:
             m["packing_efficiency"] = sched_stats.packing_efficiency(chunk_size)
     if mem_stats:

@@ -31,6 +31,7 @@ from repro.memory.transfers import TransferEngine
 from repro.serving.metrics import summarize
 from repro.serving.workload import WorkloadSpec, sample_requests
 from repro.sim.hardware import Hardware
+from repro.sim.opcost import kv_tokens_touched
 from repro.sim.stage import simulate_stage
 
 KV_BUCKET = 4096
@@ -134,8 +135,14 @@ def simulate_service(
         retained = float(pf.retained_bytes) if pf else 0.0
         fill = float(pf.fill_bytes) if pf else 0.0
         # price the step: total prefill tokens at the deepest segment context
-        # (attention cost is dominated by the longest-context chunk)
-        kv_d = sum(sched.requests[r].context_len for r in plan.decode_rids)
+        # (attention cost is dominated by the longest-context chunk).
+        # Decode-attention KV is priced at the tokens the ragged paged
+        # kernel actually touches (contexts rounded to whole blocks), which
+        # is what the engine's default attention path now reads.
+        kv_d = kv_tokens_touched(
+            (sched.requests[r].context_len for r in plan.decode_rids),
+            sched.cfg.kv_block_size,
+        )
         prefill_ctx = max((s.start + s.length for s in plan.prefill_segments), default=0)
         # effective buffer: bytes the placement wants resident, excluding
         # finishing-prefill KV (still being written — not prefetchable now)
