@@ -1,33 +1,48 @@
 """Benchmark driver — one section per paper table/figure + roofline.
 
-PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig5,roofline]
+PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke] [--only fig5,roofline]
 Prints ``name,...`` CSV rows per section.
+
+Sections that track a perf trajectory also write ``BENCH_<name>.json`` at
+the repo root (``--json-dir`` overrides where), so every run — local or CI —
+leaves a machine-readable record next to the sources instead of only an
+uploaded artifact. ``--smoke`` shrinks shapes for the CI lane.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller service sims")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI lane); implies --fast")
     ap.add_argument("--only", default="", help="comma-separated section filter")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_*.json records (default: cwd, "
+                         "i.e. the repo root when run from it)")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
+    fast = args.fast or args.smoke
 
     from benchmarks import (fig5_stage_latency, fig6_memory_sweep,
                             fig7_service_throughput, fig8_chunk_tradeoff,
                             kernels_micro, roofline)
 
+    kernels_json = os.path.join(args.json_dir, "BENCH_kernels.json")
     sections = [
         ("fig5", lambda: fig5_stage_latency.run()),
-        ("fig6", lambda: fig6_memory_sweep.run(fast=args.fast)),
-        ("fig7", lambda: fig7_service_throughput.run(fast=args.fast)),
-        ("fig8", lambda: fig8_chunk_tradeoff.run(fast=args.fast)),
-        ("kernels", lambda: kernels_micro.run()),
+        ("fig6", lambda: fig6_memory_sweep.run(fast=fast)),
+        ("fig7", lambda: fig7_service_throughput.run(fast=fast)),
+        ("fig8", lambda: fig8_chunk_tradeoff.run(fast=fast)),
+        ("kernels", lambda: kernels_micro.run(smoke=args.smoke,
+                                              json_path=kernels_json)),
         ("roofline", lambda: roofline.run()),
     ]
+    failed = []
     for name, fn in sections:
         if only and name not in only:
             continue
@@ -37,7 +52,10 @@ def main() -> None:
             fn()
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            failed.append(name)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failed:
+        raise SystemExit(f"sections failed: {','.join(failed)}")
 
 
 if __name__ == "__main__":

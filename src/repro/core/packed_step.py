@@ -13,17 +13,21 @@ Works for attention-family architectures (incl. MLA). SSM/hybrid mixers need
 contiguous per-segment scans, so those archs use the engine's two-call mode
 (their decode is state-recurrent and not KV-bound — DESIGN.md §4).
 
-Two attention realizations over the scattered cache:
-  * dense gather (``block_tables=None``) — `cache[slots]` pulls every row's
-    full padded KV extent and softmaxes over all of ``max_len``: O(N * S_max)
-    bytes/FLOPs regardless of real lengths. Kept as reference/fallback.
-  * ragged paged (``block_tables`` given) — the cache is viewed as a page
-    pool of ``page_size``-token pages; each row reads only the pages its
-    block-table row names, bounded to the live context (the engine passes
-    tables already sliced to ``nb = ceil(max_live_len / page_size)``
-    columns), and attends up to its own position: O(N * len). On TPU this is
-    kernels/paged_attention.py (out-of-range pages are skipped per row); on
-    CPU the jnp oracle gathers the same bounded page set.
+Two attention realizations:
+  * dense gather (``paged=None``) — KV lives in a dense (slot, max_len) slot
+    cache; writes scatter at (slot, position) and `cache[slots]` pulls every
+    row's full padded KV extent: O(N * S_max) bytes/FLOPs regardless of real
+    lengths. Kept as reference/fallback.
+  * ragged paged (``paged`` given) — KV lives in a *physical page pool*
+    (n_pages, page_size, ...): both reads AND this step's writes route
+    through the engine's block-table mirror, which carries the allocator's
+    real (arbitrary, non-contiguous) page ids. A row's token at position p
+    scatters into page ``table[slot, p // page]`` offset ``p % page``, and
+    attention reads only the pages the row's table names, bounded to the
+    live context (tables arrive sliced to ``nb = ceil(max_live_len /
+    page_size)`` columns) and to the row's own position: O(N * len). On TPU
+    this is kernels/paged_attention.py (out-of-range pages are skipped per
+    row); on CPU the jnp oracle gathers the same bounded page set.
 """
 from __future__ import annotations
 
@@ -46,27 +50,34 @@ def supports_packed(cfg: ModelConfig) -> bool:
 
 @dataclasses.dataclass
 class PagedView:
-    """Ragged paged-attention inputs for one packed step.
+    """Ragged paged-attention inputs for one packed step over a *physical*
+    page pool.
 
-    ``block_tables`` is the engine's device mirror of the allocator's block
-    tables — one row per cache slot (incl. the scratch slot), already sliced
-    to ``nb`` columns where ``nb * page_size`` covers the longest live
-    context this step. Dead entries point at a valid scratch page."""
+    The cache arrays are (n_pages, page_size, ...) pools — there is no dense
+    slot axis. ``block_tables`` is the engine's device mirror of the
+    allocator's block tables — one row per scheduler slot (incl. the scratch
+    slot), carrying the allocator's **actual** page ids, already sliced to
+    ``nb`` columns where ``nb * page_size`` covers the longest live context
+    this step. Dead entries point at the scratch page, so every id is a
+    valid pool index even for grid steps the kernel skips."""
 
     block_tables: jax.Array  # (n_slots+1, nb) int32 physical page ids
     page_size: int
     use_kernel: bool = False  # Pallas kernel (TPU) vs jnp oracle (CPU)
     interpret: bool = False
 
-    def pool(self, c: jax.Array) -> jax.Array:
-        """Free reshape of a dense (B, S, ...) slot cache into its page-pool
-        view (B * S/page, page, ...)."""
-        B, S = c.shape[0], c.shape[1]
-        return c.reshape((B * S // self.page_size, self.page_size) + c.shape[2:])
-
     def row_tables(self, slots: jax.Array) -> jax.Array:
         """Per-row tables: each packed row inherits its slot's table."""
         return self.block_tables[slots]
+
+    def scatter(self, pool: jax.Array, slots, positions, values) -> jax.Array:
+        """Write each row's new K/V through the block table: token at
+        logical position p of slot s lands in physical page
+        ``table[s, p // page]`` at offset ``p % page``. The scheduler grew
+        the tables at plan time, so the target pages always exist."""
+        pages = self.block_tables[slots, positions // self.page_size]
+        return pool.at[pages, positions % self.page_size].set(
+            values.astype(pool.dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -89,26 +100,29 @@ def _packed_gqa(p, cfg: ModelConfig, spec: LayerSpec, x, slots, positions, cache
     k = apply_rope(k, pos2, inv_freq)[:, 0]
     v = v[:, 0]
 
-    ck = cache["k"].at[slots, positions].set(k.astype(cache["k"].dtype))
-    cv = cache["v"].at[slots, positions].set(v.astype(cache["v"].dtype))
-    new_cache = {"k": ck, "v": cv}
-
     KV = cfg.n_kv_heads
     G = cfg.n_heads // KV
     window = cfg.local_window if spec.attn_kind == "local" else None
     if paged is not None:
-        # ragged block-table path: rows read only their own pages, up to
-        # their own position — O(N * len) instead of O(N * S_max)
+        # physical page pool: writes scatter through the block table, reads
+        # follow each row's own pages up to its own position — O(N * len)
+        # instead of O(N * S_max)
         from repro.kernels.paged_attention import ragged_paged_attention
 
+        ck = paged.scatter(cache["k"], slots, positions, k)
+        cv = paged.scatter(cache["v"], slots, positions, v)
         o = ragged_paged_attention(
             q.reshape(N, KV, G, hd).astype(x.dtype),
-            paged.pool(ck), paged.pool(cv),
+            ck, cv,
             positions + 1, paged.row_tables(slots),
             window=window, softcap=cfg.attn_logit_softcap,
             use_kernel=paged.use_kernel, interpret=paged.interpret,
         ).reshape(N, cfg.n_heads * hd)
-        return dense(p["wo"], o), new_cache
+        return dense(p["wo"], o), {"k": ck, "v": cv}
+
+    ck = cache["k"].at[slots, positions].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[slots, positions].set(v.astype(cache["v"].dtype))
+    new_cache = {"k": ck, "v": cv}
 
     S = ck.shape[1]
     kc = ck[slots].astype(x.dtype)  # (N,S,KV,hd)
@@ -138,21 +152,25 @@ def _packed_mla(p, cfg: ModelConfig, x, slots, positions, cache, inv_freq,
     q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]  # (N,H,*)
     ckv, krope = ckv[:, 0], krope[:, 0]  # (N,L), (N,rope)
 
-    cc = cache["ckv"].at[slots, positions].set(ckv.astype(cache["ckv"].dtype))
-    cr = cache["krope"].at[slots, positions].set(krope.astype(cache["krope"].dtype))
+    if paged is not None:
+        cc = paged.scatter(cache["ckv"], slots, positions, ckv)
+        cr = paged.scatter(cache["krope"], slots, positions, krope)
+    else:
+        cc = cache["ckv"].at[slots, positions].set(ckv.astype(cache["ckv"].dtype))
+        cr = cache["krope"].at[slots, positions].set(krope.astype(cache["krope"].dtype))
     new_cache = {"ckv": cc, "krope": cr}
 
     w_up = p["kv_up"]["w"].reshape(cfg.kv_lora_rank, H, nope + vh)
     w_uk, w_uv = w_up[..., :nope], w_up[..., nope:]
     q_eff = jnp.einsum("nhp,lhp->nhl", q_nope, w_uk.astype(x.dtype))
     if paged is not None:
-        # ragged block-table gather of the latent cache, bounded to the live
-        # context (nb pages) — the MLA analogue of the paged GQA kernel path
+        # ragged block-table gather of the latent page pool, bounded to the
+        # live context (nb pages) — the MLA analogue of the paged GQA path
         tabs = paged.row_tables(slots)  # (N, nb)
         nb = tabs.shape[1]
         Sr = nb * paged.page_size
-        c = paged.pool(cc)[tabs].reshape(N, Sr, cfg.kv_lora_rank).astype(x.dtype)
-        kr = paged.pool(cr)[tabs].reshape(N, Sr, rope).astype(x.dtype)
+        c = cc[tabs].reshape(N, Sr, cfg.kv_lora_rank).astype(x.dtype)
+        kr = cr[tabs].reshape(N, Sr, rope).astype(x.dtype)
         k_pos = jnp.arange(Sr)[None, :]
     else:
         Sr = cc.shape[1]
@@ -197,12 +215,14 @@ def packed_step(model: Model, params, cache, tokens, slots, positions,
                 paged: Optional[PagedView] = None):
     """tokens/slots/positions: (N,) -> (logits (N, vocab), new cache).
 
-    Padding rows point at a scratch slot (engine allocates one extra cache
-    row); their outputs are ignored by the caller.
+    Padding rows point at a scratch slot whose table names only the scratch
+    page (paged mode) or at an extra dense cache row (dense mode); their
+    outputs are ignored by the caller.
 
-    With ``paged`` set, attention runs the ragged block-table path (each row
-    attends up to its own position through its slot's page table); otherwise
-    the dense ``cache[slots]`` gather.
+    With ``paged`` set, the cache is a physical page pool and attention runs
+    the ragged block-table path (writes and reads both route through the
+    mirror's real page ids, each row attending up to its own position);
+    otherwise the dense ``cache[slots]`` gather over slot rows.
     """
     cfg = model.cfg
     assert supports_packed(cfg), cfg.name

@@ -68,6 +68,13 @@ class SchedulerConfig:
     # BEOL placement policy: "longest" (longest-context-first pinning) or
     # "priority" (priority-partitioned quotas)
     beol_policy: str = "longest"
+    # physical page pool size in blocks (None = unbounded allocator, soft
+    # capacity only). When set, the allocator is *bounded*: growth past the
+    # pool raises OutOfBlocks, so admission stalls and preemption fall back
+    # on this hard bound. The packed engine backs this with real device
+    # memory — total pool pages may be far below max_decode_batch * max_len
+    # (genuine over-subscription).
+    num_kv_blocks: Optional[int] = None
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -85,6 +92,8 @@ class SchedulerConfig:
             raise ValueError("max_concurrent_prefills must be >= 1")
         if self.kv_block_size < 1:
             raise ValueError("kv_block_size must be >= 1")
+        if self.num_kv_blocks is not None and self.num_kv_blocks < 1:
+            raise ValueError("num_kv_blocks must be >= 1 when set")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,6 +159,7 @@ class SchedStats:
     decode_tokens: int = 0
     preemptions: int = 0
     preempted_tokens: int = 0  # KV tokens dropped (recompute debt)
+    out_of_block_stalls: int = 0  # admissions/chunks deferred by a full pool
     swap_outs: int = 0
     swap_ins: int = 0
     swapped_out_tokens: int = 0  # KV tokens spilled to host (no recompute debt)
@@ -182,6 +192,7 @@ class Scheduler:
             capacity_tokens=cfg.kv_capacity_tokens,
             beol_bytes=cfg.prefetch_buffer_bytes,
             beol_policy=cfg.beol_policy,
+            num_blocks=cfg.num_kv_blocks,
         )
         self.planner = PrefetchPlanner(model_cfg, cfg.prefetch_buffer_bytes,
                                        mem=self.mem)
@@ -199,6 +210,21 @@ class Scheduler:
 
     # ------------------------------------------------------------------ API
     def add_request(self, req: Request) -> None:
+        # fail fast on a request the hard pool can never hold: its table
+        # peaks at prompt + max_new_tokens - 1 written tokens (the final
+        # sampled token is never written), and nothing the preemption loop
+        # sheds can make a lone over-sized context fit — without this guard
+        # it would either crash the decode growth with OutOfBlocks or stall
+        # its prefill forever (take clamps to 0 with has_work still true)
+        hard = self.mem.allocator.num_blocks
+        if hard is not None:
+            need = self.mem.allocator.blocks_for(
+                req.prompt_len + req.max_new_tokens - 1)
+            if need > hard:
+                raise ValueError(
+                    f"request {req.rid} peaks at {need} KV blocks "
+                    f"(prompt={req.prompt_len} + max_new={req.max_new_tokens})"
+                    f" but the physical pool holds num_kv_blocks={hard}")
         self.requests[req.rid] = req
         req.state = State.QUEUED
         self.waiting.append(req)
@@ -236,7 +262,9 @@ class Scheduler:
             return self.requests[rid]
         return min(decodes, key=lambda r: (r.priority, -r.arrival_time, -r.rid))
 
-    def _preempt(self, req: Request, plan: StepPlan) -> None:
+    def _release_slot(self, req: Request, plan: StepPlan) -> int:
+        """Preemption bookkeeping common to every victim kind: count it and
+        free the slot. Returns the released slot id."""
         self.stats.preemptions += 1
         req.preemptions += 1
         plan.preempted_rids.append(req.rid)
@@ -245,6 +273,20 @@ class Scheduler:
         self.free_slots.append(slot)
         self.free_slots.sort()
         req.slot = None
+        return slot
+
+    def _requeue_recompute(self, req: Request) -> None:
+        """Recompute-style tail: drop KV (counting the debt) and send the
+        request back to the waiting queue to re-prefill from scratch."""
+        if req.rid in self.mem.allocator.tables:
+            self.stats.preempted_tokens += self.mem.tokens_of(req.rid)
+            self.mem.free(req.rid)
+        req.prefill_pos = 0
+        req.state = State.QUEUED
+        self.waiting.append(req)
+
+    def _preempt(self, req: Request, plan: StepPlan) -> None:
+        slot = self._release_slot(req, plan)
         if self.cfg.preemption == "swap":
             # swap-style preemption: the block table spills to host DRAM and
             # all request state (prefill_pos, output) survives intact.
@@ -256,14 +298,19 @@ class Scheduler:
             plan.swapped_out.append((req.rid, slot))
             self.swapped.append(req)
             return
-        # recompute-style preemption: KV is dropped; the generated output
-        # becomes part of the effective prompt and is re-prefilled later.
-        self.stats.preempted_tokens += self.mem.tokens_of(req.rid)
-        self.mem.free(req.rid)
+        # recompute-style preemption: the generated output becomes part of
+        # the effective prompt and is re-prefilled later.
         req.restart_output_len = len(req.output)
-        req.prefill_pos = 0
-        req.state = State.QUEUED
-        self.waiting.append(req)
+        self._requeue_recompute(req)
+
+    def _preempt_prefill(self, req: Request, plan: StepPlan) -> None:
+        """Shed an in-flight *prefill* to free pool blocks (hard-bound
+        pressure only). Always recompute-style — a prefill has no output
+        yet, so re-queueing just restarts its chunked prefill; swap restore
+        semantics (which resume decoding) don't apply."""
+        self._release_slot(req, plan)
+        self.prefilling.remove(req)
+        self._requeue_recompute(req)
 
     def _restore_swapped(self, plan: StepPlan, now: float) -> None:
         """Re-admit swapped-out decodes (oldest first) when a slot is free
@@ -278,7 +325,10 @@ class Scheduler:
             tokens = self.mem.swapped_tokens_of(req.rid)
             # +1: the restored request decodes (and grows) this very step
             fits = self.mem.fits_after_growth(decode_rids, extra_tokens=tokens + 1)
-            forced = not decode_rids
+            # a forced restore may over-run the soft budget but never the
+            # physical pool — attach() would raise OutOfBlocks
+            forced = not decode_rids and self.mem.hard_fits_after_growth(
+                decode_rids, extra_tokens=tokens + 1)
             if not (fits or forced):
                 break
             self.swapped.pop(0)
@@ -297,58 +347,101 @@ class Scheduler:
 
         # KV-pressure preemption: each decode grows its context by one this
         # step; shed victims until the projected block occupancy fits. Never
-        # preempt the last remaining decode (no livelock).
-        if self.cfg.kv_capacity_tokens is not None:
+        # preempt the last remaining decode (no livelock) — it may over-run
+        # the *soft* budget, but the *hard* pool bound cannot be crossed:
+        # there, in-flight prefills are shed instead so the decode's growth
+        # never raises OutOfBlocks.
+        if self.mem.capacity_blocks is not None:
             while True:
                 decodes = [r for r in self.active.values() if r.state == State.DECODE]
                 if self.mem.fits_after_growth([r.rid for r in decodes]):
                     break
-                if len(decodes) <= 1:
-                    # soft capacity: the last decode runs over budget
-                    self.mem.over_capacity_steps += 1
-                    break
-                self._preempt(self._preempt_victim(decodes), plan)
+                if len(decodes) > 1:
+                    self._preempt(self._preempt_victim(decodes), plan)
+                    continue
+                rids = [r.rid for r in decodes]
+                if self.prefilling and not self.mem.hard_fits_after_growth(rids):
+                    self._preempt_prefill(self.prefilling[-1], plan)  # youngest
+                    continue
+                # soft capacity: the last decode runs over budget
+                self.mem.over_capacity_steps += 1
+                break
 
         # swap-in restores happen after shedding: pressure just measured, so
         # a restore never immediately re-preempts within the same step
         if self.swapped:
             self._restore_swapped(plan, now)
 
+        # KV growth is planned *here*, before the compute runs: each decode's
+        # table extends by the one token this step writes, so the engine's
+        # block-table mirror already names the physical pages the step's
+        # scatter targets. Between steps every table covers exactly the
+        # tokens actually written (no phantom +1 reservation).
         for slot, req in sorted(self.active.items()):
             if req.state == State.DECODE:
                 plan.decode_slots.append(slot)
                 plan.decode_rids.append(req.rid)
+                self.mem.on_decode(req.rid)
 
         budget = max(0, self.cfg.chunk_size - len(plan.decode_slots))
 
         # multi-prefill packing: fill the budget with one chunk per in-flight
         # prefill (admission order), admitting new requests whenever budget,
-        # a free slot, and a prefill lane remain.
-        scheduled: set = set()  # rids already given a segment this step
-        while budget > 0:
-            pre = next((r for r in self.prefilling if r.rid not in scheduled), None)
-            if pre is None:
-                if not (self.waiting and self.free_slots
-                        and len(self.prefilling) < self.cfg.max_concurrent_prefills):
-                    break
-                pre = self._pop_waiting()
-                pre.slot = self.free_slots.pop(0)
-                pre.state = State.PREFILL
-                self.active[pre.slot] = pre
-                self.prefilling.append(pre)
-                self.mem.tiers.touch(pre.rid, self.stats.steps)
-            take = min(budget, pre.total_prefill_len - pre.prefill_pos)
-            plan.prefill_segments.append(PrefillSegment(
-                rid=pre.rid, slot=pre.slot, start=pre.prefill_pos, length=take,
-                finishes=pre.prefill_pos + take >= pre.total_prefill_len,
-            ))
-            if pre.schedule_time is None:
-                pre.schedule_time = now
-            budget -= take
-            scheduled.add(pre.rid)
+        # a free slot, a prefill lane, AND pool headroom remain — a bounded
+        # pool turns OutOfBlocks into an admission signal (chunks shrink to
+        # the growable token count; admission stalls when no block is free).
+        stalled: set = set()  # rids whose chunk was pool-blocked this step
+        admission_stalled = False
+        while True:
+            scheduled: set = set()  # rids already visited this pass
+            while budget > 0:
+                pre = next((r for r in self.prefilling if r.rid not in scheduled),
+                           None)
+                if pre is None:
+                    if not (self.waiting and self.free_slots
+                            and len(self.prefilling) < self.cfg.max_concurrent_prefills):
+                        break
+                    if not self.mem.has_block_headroom():
+                        # counted once per step, even across shed-replan passes
+                        if not admission_stalled:
+                            self.stats.out_of_block_stalls += 1
+                            admission_stalled = True
+                        break
+                    pre = self._pop_waiting()
+                    pre.slot = self.free_slots.pop(0)
+                    pre.state = State.PREFILL
+                    self.active[pre.slot] = pre
+                    self.prefilling.append(pre)
+                    self.mem.tiers.touch(pre.rid, self.stats.steps)
+                scheduled.add(pre.rid)
+                take = min(budget, pre.total_prefill_len - pre.prefill_pos)
+                headroom = self.mem.grow_headroom(pre.rid)
+                if headroom is not None and take > headroom:
+                    take = headroom
+                    if take <= 0:
+                        if pre.rid not in stalled:
+                            self.stats.out_of_block_stalls += 1
+                            stalled.add(pre.rid)
+                        continue  # pool-blocked; another prefill may have slack
+                self.mem.on_prefill(pre.rid, take)  # reserve this chunk's pages
+                plan.prefill_segments.append(PrefillSegment(
+                    rid=pre.rid, slot=pre.slot, start=pre.prefill_pos, length=take,
+                    finishes=pre.prefill_pos + take >= pre.total_prefill_len,
+                ))
+                if pre.schedule_time is None:
+                    pre.schedule_time = now
+                budget -= take
+            if not plan.is_empty or len(self.prefilling) <= 1:
+                break
+            # every in-flight prefill is pool-blocked and nothing decodes:
+            # shed the youngest and replan — a lone prefill always fits (the
+            # engine sizes the pool to hold at least one max_len context),
+            # so this converges instead of deadlocking on OutOfBlocks
+            self._preempt_prefill(self.prefilling[-1], plan)
 
         # preemption/restores only fire with >= 1 surviving decode in the
-        # plan — so an empty plan implies no state changed this call.
+        # plan, and the stall-shed retry above always converges to a
+        # schedulable prefill — so an empty plan implies no state changed.
         if plan.is_empty:
             return None
 
@@ -402,15 +495,12 @@ class Scheduler:
         plan.prefetch_committed = True
 
     def complete_step(self, plan: StepPlan, now: float = 0.0) -> List[int]:
-        """Advance request states after a step executed. Returns finished rids."""
+        """Advance request states after a step executed. Returns finished
+        rids. Block tables were already grown in ``next_step`` (the pages had
+        to exist before the compute wrote into them), so here only request
+        state advances — ``mem.tokens_of`` stays equal to the KV tokens
+        actually written at every step boundary."""
         self.commit_prefetch(plan)
-        # block tables grow when the step's KV is actually written: each
-        # prefill chunk's tokens (+1 slot for the first output token when the
-        # prefill finishes) and one token per decode
-        for seg in plan.prefill_segments:
-            self.mem.on_prefill(seg.rid, seg.length + (1 if seg.finishes else 0))
-        for rid in plan.decode_rids:
-            self.mem.on_decode(rid)
         finished: List[int] = []
         for seg in plan.prefill_segments:
             req = self.requests[seg.rid]
@@ -427,11 +517,12 @@ class Scheduler:
             req = self.requests[rid]
             req.token_times.append(now)
 
-        # completion by output length (engine appends tokens itself; the sim
-        # counts). Engine calls note_token() before complete_step.
+        # completion by output length or an explicit finish flag (the engine
+        # sets Request.finished on EOS rather than mutating max_new_tokens,
+        # so requested-vs-generated length metrics stay truthful)
         for rid in list(plan.decode_rids) + plan.finishing_rids:
             req = self.requests[rid]
-            if len(req.output) >= req.max_new_tokens:
+            if req.finished or len(req.output) >= req.max_new_tokens:
                 req.state = State.DONE
                 req.finish_time = now
                 finished.append(rid)

@@ -11,8 +11,11 @@ tokens a row actually owns, not with the padded cache extent.
 
 Layouts (one flat row per query token, grouped-query heads):
   q:            (N, KV, G, d)      one query per packed row
-  k/v_pages:    (P, page, KV, d)   page pool; the engine derives it from the
-                                   dense slot cache by a free reshape
+  k/v_pages:    (P, page, KV, d)   page pool; the engine allocates KV in this
+                                   shape directly (physically paged — pages
+                                   are relocatable, ids arbitrary) and the
+                                   tables carry the block allocator's real
+                                   page ids
   lengths:      (N,) int32         keys row n may attend (<= nb * page)
   block_tables: (N, nb) int32      per-row page ids, logical order; entries
                                    past ceil(length/page) must still be valid

@@ -38,6 +38,11 @@ def main():
                     help="drop-and-re-prefill vs spill-to-host preemption")
     ap.add_argument("--kv-block", type=int, default=1,
                     help="paged KV block size in tokens")
+    ap.add_argument("--num-kv-blocks", type=int, default=None,
+                    help="physical KV page pool size in blocks (paged path; "
+                         "default max-batch * max-len / kv-block). Smaller "
+                         "pools over-subscribe: admission stalls on "
+                         "OutOfBlocks instead of over-allocating")
     ap.add_argument("--attn-kernel", choices=["auto", "paged", "dense"], default="auto",
                     help="packed attention path: ragged block-table (paged) "
                          "vs dense cache gather")
@@ -54,7 +59,7 @@ def main():
         prefetch_buffer_bytes=int(args.prefetch_mb * 2**20),
         max_concurrent_prefills=args.max_prefills, policy=args.policy,
         kv_capacity_tokens=args.kv_capacity, preemption=args.preemption,
-        kv_block_size=args.kv_block),
+        kv_block_size=args.kv_block, num_kv_blocks=args.num_kv_blocks),
         max_len=args.max_len, attn_kernel=args.attn_kernel)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
@@ -69,6 +74,10 @@ def main():
     ragged = eng.packed_mode and eng.attn_kernel == "paged"
     savings = (f"{m['attn_padding_savings']:.2f}" if ragged
                else f"n/a(would_save={m['attn_padding_savings']:.2f})")
+    alloc = eng.scheduler.mem.allocator
+    pool = (f"pool={alloc.peak_used_blocks}/{alloc.num_blocks}pages "
+            f"oob_stalls={int(m['out_of_block_stalls'])} "
+            if ragged else "")
     print(f"[launch.serve] mode={'packed' if eng.packed_mode else 'two_call'} "
           f"attn={eng.attn_kernel} "
           f"policy={args.policy} steps={eng.steps_run} "
@@ -76,6 +85,7 @@ def main():
           f"pack_eff={m['packing_efficiency']:.2f} "
           f"preemptions={int(m['preemptions'])} "
           f"swaps={int(m['swap_outs'])} "
+          f"{pool}"
           f"attn_savings={savings} "
           f"prefetch_cov={np.mean(eng.prefetch_log):.2f}")
 

@@ -5,6 +5,7 @@ from repro.memory.block_allocator import (
     BlockTable,
     DoubleFree,
     OutOfBlocks,
+    SharedBlocks,
 )
 from repro.memory.manager import KVMemoryManager, SwapRecord
 from repro.memory.tiers import BEOL, HBM, HOST, Placement, TierManager
@@ -22,6 +23,7 @@ __all__ = [
     "KVMemoryManager",
     "OutOfBlocks",
     "Placement",
+    "SharedBlocks",
     "SwapRecord",
     "TierManager",
     "Transfer",

@@ -21,12 +21,35 @@ import dataclasses
 from typing import Dict, List, Optional
 
 
+def swap_bytes_block_rounded(tokens: int, block_size: int,
+                             kv_bytes_per_token: float) -> int:
+    """Host-link bytes one swap direction moves for a ``tokens``-token table:
+    whole pages, because the physically paged engine gathers/scatters entire
+    (page, heads, head_dim) pages rather than token rows. Memory-domain
+    logic (how the allocator's pages round a token count); the manager and
+    the service simulator both price swaps through it."""
+    bs = max(block_size, 1)
+    return int(bs * -(-int(tokens) // bs) * kv_bytes_per_token)
+
+
 class OutOfBlocks(RuntimeError):
     """Bounded allocator exhausted."""
 
 
 class DoubleFree(RuntimeError):
     """A block's refcount would go negative, or a table was freed twice."""
+
+
+class SharedBlocks(RuntimeError):
+    """A swap (detach) was attempted on a table holding shared blocks.
+
+    Swap-in (``attach``) mints *fresh private* blocks for the restored table,
+    so a detach/attach round-trip of a forked table would silently duplicate
+    previously shared blocks — the fork's copy-on-write link would be broken
+    and device occupancy double-counted. Until host-side sharing is tracked,
+    swapping a table that shares blocks (or whose blocks another table still
+    references) is refused; callers must free the fork first or pick another
+    swap victim."""
 
 
 @dataclasses.dataclass
@@ -157,7 +180,14 @@ class BlockAllocator:
     def detach(self, rid: int) -> BlockTable:
         """Remove rid's table, recycling its device blocks (swap-out: the
         token count moves to another tier's bookkeeping; use ``attach`` to
-        re-admit)."""
+        re-admit). Raises ``SharedBlocks`` if any block is shared with
+        another table — see the error's docstring for why a forked table
+        cannot round-trip through swap."""
+        t = self.tables.get(rid)
+        if t is not None and any(self.ref_count.get(b, 0) > 1 for b in t.blocks):
+            raise SharedBlocks(
+                f"rid {rid} shares blocks with another table; swap would "
+                "break copy-on-write sharing (free the fork first)")
         return self._release(rid)[0]
 
     def _release(self, rid: int):

@@ -7,16 +7,21 @@ answered with a raw token counter now go through block tables:
 
   * occupancy   — ``device_tokens`` / ``device_blocks`` from live tables;
   * pressure    — ``fits_after_growth`` projects this step's decode growth
-    block-granularly against the (soft) capacity budget;
+    block-granularly against the capacity budget;
   * preemption  — ``free`` (recompute: KV dropped) vs ``swap_out`` /
     ``swap_in`` (table detaches to host DRAM and re-attaches block-exactly);
   * prefetch    — ``place_beol`` ranks the decode set's blocks into the
     BEOL tier for the tier-aware PrefetchPlanner.
 
-Capacity stays *soft* on purpose: the last remaining decode is never
-preempted (no-livelock rule inherited from PR 1), so a lone long context
-may legally exceed the budget — the allocator over-subscribes and the
-overflow is visible in ``over_capacity_steps``.
+Two capacity regimes compose:
+  * the *soft* budget (``capacity_tokens``) drives the preemption loop but
+    may legally be over-subscribed — the last remaining decode is never
+    preempted (no-livelock rule inherited from PR 1), and the overflow is
+    visible in ``over_capacity_steps``;
+  * the *hard* bound (``num_blocks``) is the physical page pool the engine
+    actually allocated device memory for — ``grow`` past it raises
+    ``OutOfBlocks``, so the scheduler must gate admission and shed load
+    (``hard_fits_after_growth`` / ``grow_headroom``) before planning writes.
 """
 from __future__ import annotations
 
@@ -24,7 +29,11 @@ import dataclasses
 from typing import Dict, Iterable, Optional, Set
 
 from repro.configs.base import ModelConfig
-from repro.memory.block_allocator import BlockAllocator, BlockTable
+from repro.memory.block_allocator import (
+    BlockAllocator,
+    BlockTable,
+    swap_bytes_block_rounded,
+)
 from repro.memory.tiers import Placement, TierManager
 
 
@@ -44,13 +53,16 @@ class KVMemoryManager:
         capacity_tokens: Optional[int] = None,
         beol_bytes: int = 0,
         beol_policy: str = "longest",
+        num_blocks: Optional[int] = None,
     ):
         self.cfg = model_cfg
         self.block_size = block_size
         self.capacity_tokens = capacity_tokens
-        # soft capacity: the allocator is unbounded, the budget is enforced
-        # by the scheduler's preemption loop via fits_after_growth()
-        self.allocator = BlockAllocator(block_size, num_blocks=None)
+        # num_blocks None -> unbounded allocator, the soft budget alone is
+        # enforced by the scheduler's preemption loop via fits_after_growth();
+        # num_blocks set -> the physical page pool the engine allocated, a
+        # hard bound grow() cannot cross
+        self.allocator = BlockAllocator(block_size, num_blocks=num_blocks)
         self.kv_btl = model_cfg.kv_bytes_per_token_layer
         self.kv_bytes_per_token = self.kv_btl * model_cfg.n_attn_layers
         block_bytes_layer = max(block_size * self.kv_btl, 1)
@@ -61,9 +73,15 @@ class KVMemoryManager:
     # ------------------------------------------------------------- occupancy
     @property
     def capacity_blocks(self) -> Optional[int]:
-        if self.capacity_tokens is None:
-            return None
-        return self.capacity_tokens // self.block_size
+        """Tightest capacity bound in blocks: min(soft budget, hard pool)."""
+        soft = (None if self.capacity_tokens is None
+                else self.capacity_tokens // self.block_size)
+        hard = self.allocator.num_blocks
+        if soft is None:
+            return hard
+        if hard is None:
+            return soft
+        return min(soft, hard)
 
     @property
     def device_tokens(self) -> int:
@@ -101,12 +119,37 @@ class KVMemoryManager:
     def fits_after_growth(self, growing_rids: Iterable[int],
                           extra_tokens: int = 0) -> bool:
         """Would this step's decode growth (+ an optional swap-in of
-        ``extra_tokens``) stay within the soft capacity budget?"""
+        ``extra_tokens``) stay within the capacity budget (soft and hard)?"""
         cap = self.capacity_blocks
         if cap is None:
             return True
         extra = self.allocator.blocks_for(extra_tokens)
         return self.projected_blocks(growing_rids) + extra <= cap
+
+    def hard_fits_after_growth(self, growing_rids: Iterable[int],
+                               extra_tokens: int = 0) -> bool:
+        """Like ``fits_after_growth`` but against the *physical* pool only:
+        when this is False, ``grow`` would raise OutOfBlocks — the soft
+        budget's over-subscription escape hatch does not apply."""
+        cap = self.allocator.num_blocks
+        if cap is None:
+            return True
+        extra = self.allocator.blocks_for(extra_tokens)
+        return self.projected_blocks(growing_rids) + extra <= cap
+
+    def grow_headroom(self, rid: int) -> Optional[int]:
+        """Tokens rid can grow before the physical pool runs out: free blocks
+        plus the slack in rid's tail block. None means unbounded."""
+        free = self.allocator.free_blocks
+        if free is None:
+            return None
+        t = self.allocator.tables.get(rid)
+        slack = t.slack_tokens(self.block_size) if t is not None else 0
+        return free * self.block_size + slack
+
+    def has_block_headroom(self) -> bool:
+        free = self.allocator.free_blocks
+        return free is None or free > 0
 
     # ------------------------------------------------------------- lifecycle
     def on_prefill(self, rid: int, n_tokens: int) -> None:
@@ -130,17 +173,24 @@ class KVMemoryManager:
 
     def swap_in(self, rid: int) -> int:
         """Restore rid's KV from host DRAM; returns tokens moved. The
-        restored table has exactly the same block count (block-exact)."""
-        rec = self.swapped.pop(rid)
-        self.allocator.attach(rec.table)
+        restored table has exactly the same block count (block-exact) but
+        freshly minted block ids — the engine copies host KV into whatever
+        physical pages the pool hands back. Transactional: on OutOfBlocks
+        the host record stays parked."""
+        rec = self.swapped[rid]
+        self.allocator.attach(rec.table)  # raises OutOfBlocks when pool-full
+        del self.swapped[rid]
         return rec.tokens
 
     def swapped_tokens_of(self, rid: int) -> int:
         return self.swapped[rid].tokens
 
     def swap_bytes(self, tokens: int) -> int:
-        """Full-stack KV bytes (all attention layers) for a token count."""
-        return tokens * self.kv_bytes_per_token
+        """Full-stack KV bytes (all attention layers) a swap of ``tokens``
+        moves over the host link — whole pages, matching the engine's
+        per-page gather/scatter copies."""
+        return swap_bytes_block_rounded(tokens, self.block_size,
+                                        self.kv_bytes_per_token)
 
     # -------------------------------------------------------------- prefetch
     def place_beol(self, ctx_tokens: Dict[int, int], finishing: Iterable[int],

@@ -9,13 +9,21 @@ Two execution modes:
     per-segment scans.
 
 Packed attention runs the **ragged paged path by default**
-(``attn_kernel="paged"``): the engine mirrors the block allocator's tables
-into a device-resident ``(n_slots+1, max_blocks)`` int32 array
-(``block_mirror``), re-synced every step across alloc/free/swap/preemption,
-and ``packed_step`` attends through it — each row reads only its own pages
-up to its own position (kernels/paged_attention.py on TPU, the bounded jnp
-oracle on CPU) instead of the dense ``cache[slots]`` gather over all of
-``max_len``. ``attn_kernel="dense"`` restores the seed's rectangular gather.
+(``attn_kernel="paged"``) over a **physically paged KV pool**: the cache is
+allocated as ``(num_kv_blocks + 1, page_size, ...)`` pages per cache key
+(the +1 is the scratch page dead table entries and padding rows point at),
+and ``block_mirror`` — a device-resident ``(n_slots+1, max_blocks)`` int32
+array re-synced every step across alloc/free/swap/preemption — carries the
+allocator's **actual** block ids, so pages are relocatable and the pool may
+be genuinely over-subscribed (total pages far below ``n_slots * max_len /
+page_size``; two long requests can share a pool larger than either's
+``max_len`` share). ``packed_step`` scatters the step's new KV through the
+mirror and attends through it — each row reads only its own pages up to its
+own position (kernels/paged_attention.py on TPU, the bounded jnp oracle on
+CPU). Swap preemption gathers/scatters whole pages per the table, and
+swap-in lands host KV in whatever fresh pages the allocator mints.
+``attn_kernel="dense"`` restores the seed's dense (slot, max_len) storage
+and rectangular gather.
 
 Either way the Scheduler (repro.core.scheduler) decides step composition and
 prefetch plans, so service-level behaviour (Figs 7/8) is policy-identical to
@@ -42,6 +50,43 @@ ATTN_KERNELS = ("auto", "paged", "dense")
 def _batch_axis(cache_key: str) -> int:
     # prefix caches: (B, ...); period/encdec caches are layer-stacked: (L, B, ...)
     return 0 if cache_key == "prefix" else 1
+
+
+def _page_bucket(n: int) -> int:
+    """Pow2-padded page count for swap transfers (bounds jit recompiles of
+    the fused page movers as contexts grow)."""
+    m = 8
+    while m < n:
+        m *= 2
+    return m
+
+
+def _saved_page_count(saved: dict) -> int:
+    """Padded page rows a host swap copy holds (per-key axis aware)."""
+    for k, sub in saved.items():
+        leaves = jax.tree.leaves(sub)
+        if leaves:
+            return leaves[0].shape[_batch_axis(k)]
+    return 0
+
+
+def _init_page_pool(model, n_pages: int, page_size: int, dtype):
+    """Allocate KV as a physical page pool: every cache leaf becomes
+    (n_pages, page_size, heads, head_dim) (period caches keep their leading
+    layer axis). Implemented as an engine-side adapter over
+    ``model.init_cache`` — one batch row of ``n_pages * page_size`` tokens
+    reshaped so each page is an independently addressable unit the block
+    tables can name in any order."""
+    flat = model.init_cache(1, n_pages * page_size, dtype)
+
+    def to_pool(key, leaf):
+        ax = _batch_axis(key)  # batch (=1) at ax, token axis at ax+1
+        shape = leaf.shape
+        return leaf.reshape(shape[:ax] + (n_pages, page_size) + shape[ax + 2:])
+
+    return {
+        k: jax.tree.map(lambda l, k=k: to_pool(k, l), flat[k]) for k in flat
+    }
 
 
 def _mask_tree(new, old, mask, axis):
@@ -82,20 +127,16 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = model.cfg
-        self.sched_cfg = sched_cfg
         self.max_len = max_len
         self.eos_id = eos_id
-        self.scheduler = Scheduler(sched_cfg, model.cfg)
-        self.scheduler.padded_len = max_len  # dense-gather padding extent
         self.packed_mode = supports_packed(model.cfg)
         self.n_slots = sched_cfg.max_decode_batch
-        # +1 scratch row for padding tokens in packed mode
-        self.cache = model.init_cache(self.n_slots + 1, max_len, cache_dtype)
         self.bucket = self.n_slots + sched_cfg.chunk_size
         self.steps_run = 0
         self.prefetch_log: List[float] = []
-        # swap-style preemption: host-DRAM copies of spilled slot rows,
-        # keyed by rid (the "host tier" of the memory subsystem)
+        # swap-style preemption: host-DRAM copies of spilled KV (whole pages
+        # in paged mode, slot rows in dense mode), keyed by rid — the "host
+        # tier" of the memory subsystem
         self.swap_store: Dict[int, dict] = {}
 
         # ragged paged attention is the packed default; it needs the page
@@ -114,16 +155,66 @@ class Engine:
             )
         self.attn_kernel = attn_kernel
 
+        if self.attn_kernel == "paged":
+            # physically paged KV: the pool is num_kv_blocks relocatable
+            # pages (default: the dense layout's capacity) + 1 scratch page.
+            # Backing the allocator with the same bound makes OutOfBlocks a
+            # real admission signal instead of bookkeeping fiction.
+            pps = self.pages_per_slot = max_len // self.page_size
+            pool_pages = sched_cfg.num_kv_blocks
+            if pool_pages is None:
+                pool_pages = self.n_slots * pps
+                sched_cfg = dataclasses.replace(sched_cfg, num_kv_blocks=pool_pages)
+            if pool_pages < pps:
+                raise ValueError(
+                    f"num_kv_blocks={pool_pages} cannot hold one max_len "
+                    f"context ({pps} pages of {self.page_size} tokens)"
+                )
+            self.num_pool_pages = pool_pages
+            self._scratch_page = pool_pages  # the extra page past the pool
+            self.cache = _init_page_pool(
+                model, pool_pages + 1, self.page_size, cache_dtype
+            )
+            # device mirror of the allocator's block tables: one row per
+            # slot holding *real* physical page ids; dead entries (and the
+            # whole scratch row padding tokens write through) -> scratch
+            self.block_mirror = np.full(
+                (self.n_slots + 1, pps), self._scratch_page, np.int32
+            )
+            # fused page movers for swap traffic (the paged analogue of the
+            # dense path's _gather_slot/_scatter_slot): one compiled call +
+            # one host transfer per swapped request, ids padded to a pow2
+            # bucket of scratch pages so recompiles stay bounded
+            self._gather_pages = jax.jit(
+                lambda cache, ids: {
+                    k: jax.tree.map(
+                        lambda l, a=_batch_axis(k): jnp.take(l, ids, axis=a),
+                        cache[k],
+                    )
+                    for k in cache
+                }
+            )
+            self._scatter_pages = jax.jit(
+                lambda cache, part, ids: {
+                    k: jax.tree.map(
+                        lambda l, h, a=_batch_axis(k): l.at[
+                            (slice(None),) * a + (ids,)
+                        ].set(h.astype(l.dtype)),
+                        cache[k], part[k],
+                    )
+                    for k in cache
+                }
+            )
+        else:
+            # dense slot storage: +1 scratch row for padding tokens
+            self.cache = model.init_cache(self.n_slots + 1, max_len, cache_dtype)
+
+        self.sched_cfg = sched_cfg
+        self.scheduler = Scheduler(sched_cfg, model.cfg)
+        self.scheduler.padded_len = max_len  # dense-gather padding extent
+
         if self.packed_mode:
             if self.attn_kernel == "paged":
-                pps = self.pages_per_slot = max_len // self.page_size
-                self._scratch_page = self.n_slots * pps
-                # device mirror of the allocator's block tables: one row per
-                # slot, physical page ids; dead entries -> a scratch page
-                self.block_mirror = np.full(
-                    (self.n_slots + 1, pps), self._scratch_page, np.int32
-                )
-                self.block_mirror[self.n_slots] = self._scratch_page + np.arange(pps)
                 use_pallas = jax.default_backend() == "tpu"
                 page = self.page_size
                 self._packed = jax.jit(
@@ -196,9 +287,9 @@ class Engine:
 
     # ----------------------------------------------------------------- swaps
     def block_spans(self, rid: int) -> List[Tuple[int, int, int]]:
-        """Map a request's block table onto its slot cache's token axis:
-        [(block_id, start_token, n_tokens)] — how the paged allocator's
-        blocks tile the dense (slot, max_len) KV rows."""
+        """Map a request's block table onto its logical token axis:
+        [(block_id, start_token, n_tokens)] — which physical pool page (or
+        dense-row page in dense mode) holds which span of the context."""
         mem = self.scheduler.mem
         table = mem.allocator.tables.get(rid)
         if table is None:
@@ -210,11 +301,62 @@ class Engine:
         ]
 
     def _apply_swaps(self, plan: StepPlan) -> None:
-        """Execute the plan's swap traffic on the slot caches: spilled slots
-        copy to host memory (swap_store), restored requests land in their
-        new slot before the compute call. Outs run first so a swap-in may
-        reuse a just-freed slot within the same step. Each direction is one
-        fused compiled call + one host transfer per swapped request."""
+        """Execute the plan's swap traffic on the KV storage before the
+        compute call. Paged mode moves whole pages: a swap-out gathers
+        exactly the pages the victim's (now detached) table named; a swap-in
+        scatters the host copy into the *fresh* pages ``attach()`` minted —
+        physical ids differ across the round trip, contents stay
+        token-identical. Dense mode moves whole slot rows. Outs run first so
+        a swap-in may reuse just-freed pages/slots within the same step."""
+        if self.attn_kernel == "paged":
+            mem = self.scheduler.mem
+            scratch = self._scratch_page
+            for rid, _slot in plan.swapped_out:
+                blocks = mem.swapped[rid].table.blocks
+                n = len(blocks)
+                ids = np.full((_page_bucket(n),), scratch, np.int32)
+                ids[:n] = blocks
+                gathered = self._gather_pages(self.cache, jnp.asarray(ids))
+                # the pow2 id bucket bounds jit recompiles, but only the
+                # live pages cross the host link: slice on device, then
+                # transfer — matching the block-rounded bytes the sim prices
+                self.swap_store[rid] = jax.device_get({
+                    k: jax.tree.map(
+                        lambda l, a=_batch_axis(k): jax.lax.slice_in_dim(
+                            l, 0, n, axis=a),
+                        gathered[k],
+                    )
+                    for k in gathered
+                })
+            for rid, _slot in plan.swapped_in:
+                saved = self.swap_store.pop(rid)
+                blocks = mem.allocator.tables[rid].blocks
+                # scatter into the *fresh* pages attach() minted. The host
+                # copy holds exactly the live pages; pad it (and the id
+                # vector, with the scratch page) back to the pow2 bucket so
+                # the compiled scatter is reused — scratch receives zeros it
+                # never meaningfully serves. If the table already grew one
+                # extra page for this step's decode write, that page needs
+                # no restore: it only covers positions at/after the restored
+                # context, which stay masked until the compute writes them.
+                n = _saved_page_count(saved)
+                m = _page_bucket(n)
+                ids = np.full((m,), scratch, np.int32)
+                ids[:n] = blocks[:n]
+                if m != n:
+                    saved = {
+                        k: jax.tree.map(
+                            lambda h, a=_batch_axis(k): np.concatenate(
+                                [h, np.zeros(
+                                    h.shape[:a] + (m - n,) + h.shape[a + 1:],
+                                    h.dtype)], axis=a),
+                            saved[k],
+                        )
+                        for k in saved
+                    }
+                self.cache = self._scatter_pages(self.cache, saved,
+                                                 jnp.asarray(ids))
+            return
         for rid, slot in plan.swapped_out:
             self.swap_store[rid] = jax.device_get(
                 self._gather_slot(self.cache, jnp.int32(slot))
@@ -232,21 +374,19 @@ class Engine:
     def _append(self, req: Request, tok: int) -> None:
         req.output.append(tok)
         if self.eos_id is not None and tok == self.eos_id:
-            req.max_new_tokens = len(req.output)  # force completion
+            req.finished = True  # complete_step checks the flag explicitly
 
     # ---------------------------------------------------------------- packed
     def _sync_block_mirror(self, plan: StepPlan) -> int:
         """Re-sync the device block-table mirror from the allocator's tables
         for this step's active slots. Freed/preempted/swapped-out slots fall
-        back to the scratch page; live slots map their table's blocks (plus
-        the blocks this step's writes will touch — the allocator grows tables
-        in ``complete_step``, *after* the compute) onto their page range.
+        back to the scratch page; live slots copy their table's **actual
+        physical page ids** — the scheduler grew tables at plan time, so the
+        ids already cover the pages this step's writes scatter into.
         Returns the longest context (tokens) any row touches this step."""
         m = self.block_mirror
         pps = self.pages_per_slot
-        page = self.page_size
         m[:] = self._scratch_page
-        m[self.n_slots] = self._scratch_page + np.arange(pps)
         sch = self.scheduler
         need_tokens: Dict[int, int] = {}
         for slot, rid in zip(plan.decode_slots, plan.decode_rids):
@@ -257,11 +397,11 @@ class Engine:
         tables = sch.mem.allocator.tables
         for slot, req in sch.active.items():
             table = tables.get(req.rid)
-            live = table.num_blocks if table is not None else 0
-            need = -(-need_tokens.get(slot, 0) // page)
-            n = min(pps, max(live, need))
+            if table is None:
+                continue
+            n = min(pps, table.num_blocks)
             if n:
-                m[slot, :n] = slot * pps + np.arange(n)
+                m[slot, :n] = table.blocks[:n]
         return max(need_tokens.values(), default=1)
 
     def _nb_bucket(self, max_tokens: int) -> int:

@@ -57,6 +57,9 @@ def summarize(requests: Iterable[Request], horizon: float,
         m["attn_tokens_touched"] = float(sched_stats.attn_tokens_touched)
         m["attn_tokens_padded"] = float(sched_stats.attn_tokens_padded)
         m["attn_padding_savings"] = sched_stats.attn_padding_savings()
+        # bounded physical pool: admissions/chunks deferred because the
+        # allocator had no free page (0 forever when the pool is unbounded)
+        m["out_of_block_stalls"] = float(sched_stats.out_of_block_stalls)
         if chunk_size is not None:
             m["packing_efficiency"] = sched_stats.packing_efficiency(chunk_size)
     if mem_stats:

@@ -27,6 +27,10 @@ class Request:
     slot: Optional[int] = None
     prefill_pos: int = 0  # effective-prompt tokens already prefilled
     output: List[int] = dataclasses.field(default_factory=list)
+    # set by the engine when an EOS token is sampled: the request completes
+    # at the next complete_step without max_new_tokens being rewritten (the
+    # requested length survives for metrics and recompute rebuilds)
+    finished: bool = False
 
     # preemption bookkeeping: a recompute-preempted decode drops its KV and
     # re-prefills its *effective prompt* = prompt + the output tokens

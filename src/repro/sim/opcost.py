@@ -13,6 +13,12 @@ import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 from repro.configs.base import LayerSpec, ModelConfig
+
+# Page-granular swap pricing shared with the engine's memory manager. The
+# single source of truth lives in repro.memory.block_allocator (it describes
+# how the allocator's pages round a token count); re-exported here so sim
+# pricing code keeps one import surface alongside kv_tokens_touched.
+from repro.memory.block_allocator import swap_bytes_block_rounded  # noqa: F401
 from repro.sim.hardware import Hardware
 
 BYTES = 2  # fp16 inference (paper)
@@ -25,6 +31,8 @@ def kv_tokens_touched(ctx_lens: Sequence[int], block_size: int = 1) -> int:
     cache extent). ``block_size=1`` is exact per-token pricing."""
     bs = max(block_size, 1)
     return sum(bs * -(-int(c) // bs) for c in ctx_lens)
+
+
 
 
 @dataclasses.dataclass

@@ -109,7 +109,6 @@ def simulate_service(
     )
     costs = _StageCostCache(hw, cfg, mode, buffer_bytes)
     dma = TransferEngine(hw)
-    kv_full = sched.mem.kv_bytes_per_token  # full-stack KV bytes per token
 
     t = 0.0
     ai = 0  # next arrival index
@@ -149,9 +148,14 @@ def simulate_service(
         step_t, step_hbm = costs.cost(plan.total_prefill_tokens, prefill_ctx,
                                       len(plan.decode_rids), kv_d,
                                       buffer=retained + fill)
-        swap_out_b = sum(kv_full * sched.requests[r].context_len
+        # swap traffic moves whole pages of *written* KV (the engine gathers
+        # and scatters page-granular copies) — price it from the memory
+        # manager's block-rounded byte count, not the per-token context
+        swap_out_b = sum(sched.mem.swap_bytes(sched.mem.swapped_tokens_of(r))
                          for r, _ in plan.swapped_out)
-        swap_in_b = sum(kv_full * sched.requests[r].context_len
+        # a restored table already holds this step's +1 decode reservation;
+        # the host link only moved the previously written tokens
+        swap_in_b = sum(sched.mem.swap_bytes(max(0, sched.mem.tokens_of(r) - 1))
                         for r, _ in plan.swapped_in)
         report = dma.price(dma.build(fill, swap_out_b, swap_in_b), step_t, step_hbm)
         if report.fill_shortfall_bytes > 0:

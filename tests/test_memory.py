@@ -309,15 +309,24 @@ def test_swap_preemption_invariants(data, chunk, slots, kv_cap, block_size, evic
             assert s.requests[rid].state == State.SWAPPED
             assert rid in s.mem.swapped
             assert rid not in s.mem.allocator.tables
-            # host record holds exactly the request's KV tokens
-            assert s.mem.swapped_tokens_of(rid) == s.requests[rid].context_len
+            # host record holds exactly the KV tokens *written* so far: the
+            # victim's last sampled token has no KV yet (context_len counts
+            # it because the next attention step will), so written = ctx - 1
+            assert s.mem.swapped_tokens_of(rid) == s.requests[rid].context_len - 1
         for rid, slot in plan.swapped_in:
             assert s.requests[rid].state == State.DECODE
             assert s.requests[rid].slot == slot
+            # restored table + this step's plan-time decode growth covers
+            # exactly the context the upcoming attention touches
             assert s.mem.tokens_of(rid) == s.requests[rid].context_len
         decodes = [r for r in s.active.values() if r.state == State.DECODE]
         if len(decodes) > 1:
-            assert s.kv_in_use <= (kv_cap // block_size + len(decodes)) * block_size
+            # post-next_step tables include this step's reserved writes:
+            # decode growth (budgeted by the preemption loop) and prefill
+            # chunk tokens (allowed to over-run the soft budget)
+            assert s.kv_in_use <= ((kv_cap // block_size + len(decodes)) * block_size
+                                   + plan.total_prefill_tokens
+                                   + len(plan.prefill_segments) * block_size)
 
     drive(sched, check=check)
     for r in sched.requests.values():

@@ -217,8 +217,9 @@ def test_engine_paged_token_identical_to_dense_and_serial(arch):
 
 def test_engine_block_mirror_lifecycle():
     """The device block-table mirror tracks the allocator across admission,
-    swap preemption, restore, and completion: live slots map their own page
-    range, everything else points at the scratch page."""
+    swap preemption, restore, and completion: live slots carry their table's
+    *real physical page ids* (never a slot-derived identity map), everything
+    else points at the scratch page."""
     cfg = reduce_config(get_config("llama3.1-8b"))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -230,39 +231,47 @@ def test_engine_block_mirror_lifecycle():
         max_len=MAX_LEN,
     )
     assert eng.attn_kernel == "paged"
+    # default pool = the dense layout's capacity, bounded
+    assert eng.scheduler.mem.allocator.num_blocks == eng.num_pool_pages
+    assert eng.num_pool_pages == eng.n_slots * eng.pages_per_slot
     for r in _requests(cfg, 44):
         eng.submit(r)
 
     pps = eng.pages_per_slot
     scratch = eng._scratch_page
-    saw_scratched_active_free = False
+    saw_scratched_free = False
+    saw_nonidentity = False
     while eng.scheduler.has_work and eng.steps_run < 300:
-        plan = eng.step(now=float(eng.steps_run))
+        sch = eng.scheduler
+        plan = sch.next_step(now=float(eng.steps_run))
         if plan is None:
             break
-        sch = eng.scheduler
+        eng._apply_swaps(plan)
+        eng._run_packed(plan)  # syncs the mirror before compute
         active_slots = set(sch.active.keys())
-        # slots that carried rows this step keep their mapping until the
-        # next sync even if their request just finished
-        stepped = set(plan.decode_slots) | {s.slot for s in plan.prefill_segments}
         for slot in range(eng.n_slots):
             row = eng.block_mirror[slot]
             if slot not in active_slots:
-                if slot not in stepped:
-                    assert (row == scratch).all(), f"freed slot {slot} not scratched"
-                    saw_scratched_active_free = True
+                assert (row == scratch).all(), f"dead slot {slot} not scratched"
+                saw_scratched_free = True
             else:
                 rid = sch.active[slot].rid
                 table = sch.mem.allocator.tables.get(rid)
-                if table is not None and table.num_blocks > 1:
-                    # conservative prefix: blocks the table held *before*
-                    # this step's growth are identity-mapped
-                    n = min(pps, table.num_blocks - 1)
-                    assert (row[:n] == slot * pps + np.arange(n)).all()
-        # scratch slot keeps its own page range (padding rows write there)
-        assert (eng.block_mirror[eng.n_slots] == scratch + np.arange(pps)).all()
+                if table is not None:
+                    n = min(pps, table.num_blocks)
+                    # the mirror is the allocator's table, verbatim
+                    assert list(row[:n]) == table.blocks[:n]
+                    assert (row[n:] == scratch).all()
+                    if list(row[:n]) != [slot * pps + j for j in range(n)]:
+                        saw_nonidentity = True
+        # the scratch slot's whole row is the single scratch page (padding
+        # rows write their garbage K/V there)
+        assert (eng.block_mirror[eng.n_slots] == scratch).all()
+        sch.complete_step(plan, now=float(eng.steps_run))
+        eng.steps_run += 1
 
     assert eng.scheduler.stats.swap_outs > 0, "swap pressure never triggered"
-    assert saw_scratched_active_free
+    assert saw_scratched_free
+    assert saw_nonidentity, "allocator ids never diverged from the slot map"
     for r in eng.scheduler.requests.values():
         assert len(r.output) == r.max_new_tokens

@@ -1,0 +1,279 @@
+"""Physically paged KV pool: bounded-allocator pressure, write-exact block
+accounting, swap/fork interaction, and the EOS finish flag.
+
+The acceptance statement of PR 4: the packed engine runs against a page pool
+*smaller* than max_decode_batch * max_len (genuine over-subscription), the
+device mirror carries the allocator's real (non-contiguous) page ids, and
+outputs stay token-identical to the serial reference under OutOfBlocks
+admission stalls, preemption, and swap restores into different pages.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _compat import given, settings, st
+
+from repro.configs import get_config, reduce_config
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.memory import BlockAllocator, SharedBlocks
+from repro.models import build_model
+from repro.serving import sampling
+from repro.serving.engine import Engine
+from repro.serving.request import Request, State
+
+CFG = get_config("llama3.1-8b")
+MAX_LEN = 64
+
+
+# ---------------------------------------------------------------------------
+# allocator: swap vs fork (copy-on-write sharing must not silently duplicate)
+# ---------------------------------------------------------------------------
+
+
+def test_detach_refuses_shared_blocks():
+    """fork -> swap_out would mint private copies of shared blocks on the
+    way back in; the allocator refuses the detach in both directions."""
+    alloc = BlockAllocator(block_size=4)
+    alloc.grow(0, 12)
+    alloc.fork(0, 1)
+    with pytest.raises(SharedBlocks):
+        alloc.detach(0)
+    with pytest.raises(SharedBlocks):
+        alloc.detach(1)
+    # tables are intact after the refused swap
+    assert alloc.tables[0].blocks == alloc.tables[1].blocks
+    # once the fork releases its reference, swap round-trips block-exactly
+    alloc.free(1)
+    table = alloc.detach(0)
+    alloc.attach(table)
+    assert alloc.tables[0].num_blocks == table.num_blocks
+
+
+@settings(deadline=None, max_examples=30)
+@given(data=st.data(), block_size=st.integers(1, 8))
+def test_fork_swap_property(data, block_size):
+    """Property: for any grow/fork history, detach raises iff the table
+    shares at least one block, and a permitted detach/attach round trip
+    preserves token and block counts."""
+    alloc = BlockAllocator(block_size)
+    alloc.grow(0, data.draw(st.integers(1, 50)))
+    forked = data.draw(st.booleans())
+    if forked:
+        alloc.fork(0, 1)
+        if data.draw(st.booleans()):
+            alloc.grow(1, data.draw(st.integers(1, 20)))  # fork diverges
+    shares = any(alloc.ref_count[b] > 1 for b in alloc.tables[0].blocks)
+    if shares:
+        with pytest.raises(SharedBlocks):
+            alloc.detach(0)
+        assert 0 in alloc.tables  # refused swap leaves the table live
+    else:
+        before = (alloc.tables[0].num_tokens, alloc.tables[0].num_blocks)
+        t = alloc.detach(0)
+        alloc.attach(t)
+        assert (alloc.tables[0].num_tokens, alloc.tables[0].num_blocks) == before
+
+
+# ---------------------------------------------------------------------------
+# scheduler: block tables == tokens actually written, whole lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _written_tokens(req) -> int:
+    """KV tokens a request's cache actually holds at a step boundary: the
+    last sampled token of a decoding request has not been written yet."""
+    produced = max(0, len(req.output) - req.restart_output_len)
+    if req.state == State.DECODE and produced > 0:
+        produced -= 1
+    return req.prefill_pos + produced
+
+
+def test_block_table_parity_across_lifecycle():
+    """Regression for the +1 over-count: mem.tokens_of(rid) must equal the
+    written-token count at every step boundary across prefill -> decode ->
+    finish, so pressure, fragmentation, and swap bytes never run a token
+    ahead of real KV."""
+    sched = Scheduler(
+        SchedulerConfig(chunk_size=8, max_decode_batch=3, kv_block_size=4,
+                        max_concurrent_prefills=2),
+        CFG,
+    )
+    for i, (p, o) in enumerate([(5, 6), (17, 4), (9, 8), (23, 5)]):
+        sched.add_request(Request(rid=i, prompt=[0] * p, max_new_tokens=o))
+
+    checked = 0
+    step = 0
+    while sched.has_work and step < 500:
+        plan = sched.next_step(now=float(step))
+        if plan is None:
+            break
+        for rid in plan.decode_rids:
+            sched.requests[rid].output.append(0)
+        for rid in plan.finishing_rids:
+            sched.requests[rid].output.append(0)
+        sched.complete_step(plan, now=float(step))
+        for req in sched.requests.values():
+            if req.state == State.DONE:
+                assert sched.mem.tokens_of(req.rid) == 0  # table freed
+            else:
+                assert sched.mem.tokens_of(req.rid) == _written_tokens(req), (
+                    f"rid {req.rid} state {req.state}: table "
+                    f"{sched.mem.tokens_of(req.rid)} != written "
+                    f"{_written_tokens(req)}"
+                )
+                checked += 1
+        step += 1
+    assert checked > 0
+    assert sched.mem.device_tokens == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: bounded, genuinely over-subscribed pool
+# ---------------------------------------------------------------------------
+
+
+def _serial(model, params, req):
+    cache = model.init_cache(1, MAX_LEN, jnp.float32)
+    batch = {"tokens": jnp.asarray(np.asarray(req.prompt, np.int32)[None])}
+    logits, cache = jax.jit(model.prefill)(params, batch, cache, jnp.int32(0))
+    out = [int(sampling.greedy(logits[0]))]
+    pos = len(req.prompt)
+    decode = jax.jit(model.decode_step)
+    while len(out) < req.max_new_tokens:
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, cache = decode(params, tok, cache, jnp.int32(pos))
+        out.append(int(sampling.greedy(logits[0])))
+        pos += 1
+    return out
+
+
+def _pool_requests(cfg, seed=46, n=4):
+    rng = jax.random.PRNGKey(seed)
+    lens = [21, 17, 25, 23][:n]
+    outs = [6, 5, 8, 5][:n]
+    return [
+        Request(
+            rid=i,
+            prompt=np.asarray(jax.random.randint(
+                jax.random.fold_in(rng, i), (lens[i],), 0, cfg.vocab_size
+            )).tolist(),
+            max_new_tokens=outs[i],
+        )
+        for i in range(n)
+    ]
+
+
+@pytest.mark.parametrize("preemption", ["recompute", "swap"])
+def test_engine_oversubscribed_pool_token_identical(preemption):
+    """A pool of 16 pages (= one max_len context) serves 3 slots whose dense
+    layout would need 48: admission stalls on OutOfBlocks, pressure preempts,
+    and every output still matches the serial reference token-for-token."""
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _pool_requests(cfg)
+    expected = {r.rid: _serial(model, params, r) for r in reqs}
+
+    eng = Engine(
+        model, params,
+        SchedulerConfig(chunk_size=16, max_decode_batch=3,
+                        prefetch_buffer_bytes=1 << 20, max_concurrent_prefills=2,
+                        kv_block_size=4, num_kv_blocks=16, preemption=preemption),
+        max_len=MAX_LEN,
+    )
+    assert eng.attn_kernel == "paged"
+    alloc = eng.scheduler.mem.allocator
+    assert alloc.num_blocks == 16
+    # genuine over-subscription: pool < n_slots * max_len / page_size
+    assert eng.num_pool_pages < eng.n_slots * eng.pages_per_slot
+
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                           max_new_tokens=r.max_new_tokens))
+    saw_noncontiguous = False
+    while eng.scheduler.has_work and eng.steps_run < 500:
+        if eng.step(now=float(eng.steps_run)) is None:
+            break
+        for t in eng.scheduler.mem.allocator.tables.values():
+            if any(b2 != b1 + 1 for b1, b2 in zip(t.blocks, t.blocks[1:])):
+                saw_noncontiguous = True
+        assert eng.scheduler.mem.device_blocks <= 16
+
+    stats = eng.scheduler.stats
+    assert stats.out_of_block_stalls > 0 or stats.preemptions > 0, (
+        "a 16-page pool under 3 growing contexts never felt pressure")
+    assert alloc.peak_used_blocks <= 16
+    assert saw_noncontiguous, "free->realloc churn never shuffled page ids"
+    for r in reqs:
+        got = eng.scheduler.requests[r.rid].output
+        assert got == expected[r.rid], (
+            f"{preemption} rid={r.rid}: paged-pool {got} != serial {expected[r.rid]}"
+        )
+
+
+def test_scheduler_rejects_request_exceeding_hard_pool():
+    """A request whose peak context cannot fit the bounded pool is rejected
+    at submission — without this it would crash decode growth with an
+    uncaught OutOfBlocks (or stall its prefill forever), even on the dense
+    engine path that skips the Engine's pps validation."""
+    sched = Scheduler(
+        SchedulerConfig(chunk_size=8, max_decode_batch=2, kv_block_size=4,
+                        num_kv_blocks=4),
+        CFG,
+    )
+    with pytest.raises(ValueError, match="num_kv_blocks"):
+        sched.add_request(Request(rid=0, prompt=[0] * 14, max_new_tokens=8))
+    # peak 10 + 7 - 1 = 16 tokens = exactly 4 blocks: accepted and runs
+    sched.add_request(Request(rid=1, prompt=[0] * 10, max_new_tokens=7))
+    step = 0
+    while sched.has_work and step < 100:
+        plan = sched.next_step(now=float(step))
+        assert plan is not None
+        for rid in plan.decode_rids + plan.finishing_rids:
+            sched.requests[rid].output.append(0)
+        sched.complete_step(plan, now=float(step))
+        step += 1
+    assert sched.requests[1].state == State.DONE
+
+
+def test_engine_pool_must_hold_one_context():
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="num_kv_blocks"):
+        Engine(model, params,
+               SchedulerConfig(chunk_size=8, max_decode_batch=2,
+                               kv_block_size=4, num_kv_blocks=8),
+               max_len=MAX_LEN)
+
+
+# ---------------------------------------------------------------------------
+# engine: EOS sets a finish flag instead of mutating the request's config
+# ---------------------------------------------------------------------------
+
+
+def test_eos_completion_keeps_max_new_tokens():
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    probe = _pool_requests(cfg, n=1)[0]
+    serial = _serial(model, params, Request(rid=0, prompt=list(probe.prompt),
+                                            max_new_tokens=4))
+    eos = serial[1]  # greedy decoding will hit this on the second token
+
+    eng = Engine(
+        model, params,
+        SchedulerConfig(chunk_size=16, max_decode_batch=2,
+                        prefetch_buffer_bytes=1 << 20, kv_block_size=4),
+        max_len=MAX_LEN, eos_id=eos,
+    )
+    eng.submit(Request(rid=0, prompt=list(probe.prompt), max_new_tokens=10))
+    eng.run(max_steps=100)
+    req = eng.scheduler.requests[0]
+    assert req.state == State.DONE
+    assert req.finished, "EOS must set the explicit finish flag"
+    assert req.output == serial[:2]
+    assert req.max_new_tokens == 10, (
+        "requested length was mutated by EOS completion")
