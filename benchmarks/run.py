@@ -30,7 +30,7 @@ def main() -> None:
 
     from benchmarks import (fig5_stage_latency, fig6_memory_sweep,
                             fig7_service_throughput, fig8_chunk_tradeoff,
-                            kernels_micro, roofline)
+                            kernels_micro, prefix_cache_bench, roofline)
 
     kernels_json = os.path.join(args.json_dir, "BENCH_kernels.json")
     sections = [
@@ -40,6 +40,11 @@ def main() -> None:
         ("fig8", lambda: fig8_chunk_tradeoff.run(fast=fast)),
         ("kernels", lambda: kernels_micro.run(smoke=args.smoke,
                                               json_path=kernels_json)),
+        # shared-system-prompt serving with the radix prefix cache on vs
+        # off: asserts hit_rate > 0, strictly fewer prefill tokens, and
+        # strictly fewer HBM fill bytes, engine and sim agreeing
+        ("prefix_cache", lambda: prefix_cache_bench.run(smoke=args.smoke,
+                                                        json_path=kernels_json)),
         ("roofline", lambda: roofline.run()),
     ]
     failed = []

@@ -61,10 +61,12 @@ class PrefetchPlan:
     @property
     def coverage(self) -> float:
         """Fraction of the next attention op's KV bytes already on-chip.
-        1.0 when nothing is needed (empty decode set / attention-free)."""
+        1.0 when nothing is needed (empty decode set / attention-free).
+        Clamped: per-request residency may sum shared prefix pages more than
+        once while the demand denominator counts each physical page once."""
         if self.total_tokens == 0:
             return 1.0
-        return self.resident_total / self.total_tokens
+        return min(1.0, self.resident_total / self.total_tokens)
 
     @property
     def prefetch_bytes(self) -> int:
@@ -114,8 +116,9 @@ class PrefetchPlanner:
             return PrefetchPlan(self.buffer_bytes, 0, {r: 0 for r in ctx_lens},
                                 total_tokens=0)
         touched = {r: self._touched(t) for r, t in ctx_lens.items()}
+        total = self._dedup_total(ctx_lens, touched)
         if self.mem is not None and self.mem.tiers.capacity_bytes > 0:
-            return self._plan_tiered(ctx_lens, touched, fin, priorities)
+            return self._plan_tiered(ctx_lens, touched, fin, priorities, total)
         budget = self.buffer_bytes // self.kv_btl  # tokens that fit (one layer)
         resident: Dict[int, int] = {}
         for rid in sorted(ctx_lens, key=lambda r: (r in fin, -ctx_lens[r])):
@@ -123,12 +126,24 @@ class PrefetchPlanner:
             resident[rid] = take
             budget -= take
         return PrefetchPlan(
-            self.buffer_bytes, self.kv_btl, resident, sum(touched.values()),
+            self.buffer_bytes, self.kv_btl, resident, total,
             finishing_tokens=sum(resident[r] for r in fin if r in resident),
         )
 
+    def _dedup_total(self, ctx_lens: Dict[int, int],
+                     touched: Dict[int, int]) -> int:
+        """Demand denominator with shared pages counted ONCE: requests whose
+        tables fork a common prefix (radix cache hits) need that prefix
+        resident a single time — one BEOL copy serves every sharer."""
+        total = sum(touched.values())
+        if self.mem is None:
+            return total
+        overlap = self.mem.shared_overlap_tokens(ctx_lens)
+        return max(0, total - overlap)
+
     def _plan_tiered(self, ctx_lens: Dict[int, int], touched: Dict[int, int],
-                     fin: set, priorities: Optional[Dict[int, int]]) -> PrefetchPlan:
+                     fin: set, priorities: Optional[Dict[int, int]],
+                     total: int) -> PrefetchPlan:
         """Block-granular residency over the BEOL tier's placement policy."""
         mem = self.mem
         placement = mem.place_beol(ctx_lens, finishing=fin, priorities=priorities)
@@ -142,7 +157,7 @@ class PrefetchPlanner:
             for r in ctx_lens
         }
         return PrefetchPlan(
-            self.buffer_bytes, self.kv_btl, resident, sum(touched.values()),
+            self.buffer_bytes, self.kv_btl, resident, total,
             finishing_tokens=sum(resident[r] for r in fin if r in resident),
             retained_bytes=sum(retained_tok[r] for r in ctx_lens if r not in fin)
             * self.kv_btl,

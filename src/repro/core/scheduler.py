@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.prefetch import PrefetchPlan, PrefetchPlanner
+from repro.memory.block_allocator import prefix_fill_bytes_saved
 from repro.memory.manager import KVMemoryManager
 from repro.serving.request import Request, State
 from repro.sim.opcost import kv_tokens_touched
@@ -75,6 +76,19 @@ class SchedulerConfig:
     # memory — total pool pages may be far below max_decode_batch * max_len
     # (genuine over-subscription).
     num_kv_blocks: Optional[int] = None
+    # radix prefix cache: completed prompt prefixes are indexed block-by-
+    # block and later requests adopt the matched run copy-on-write — no
+    # prefill compute, no HBM fill for the shared tokens. Needs materialized
+    # token ids (placeholder [0]*L prompts would alias every request).
+    enable_prefix_cache: bool = False
+    # cap on cached blocks (None = bounded only by pool pressure/eviction)
+    prefix_cache_blocks: Optional[int] = None
+    # admission low-watermark in free pool pages: NEW requests are admitted
+    # only while at least this many pages are free (or reclaimable from the
+    # prefix cache), so admission backs off before the hard OutOfBlocks
+    # signal and shed/re-admit thrash shrinks. 0 disables; in-flight work
+    # and an idle system are never gated (progress guarantee).
+    admission_watermark: int = 0
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -94,6 +108,10 @@ class SchedulerConfig:
             raise ValueError("kv_block_size must be >= 1")
         if self.num_kv_blocks is not None and self.num_kv_blocks < 1:
             raise ValueError("num_kv_blocks must be >= 1 when set")
+        if self.admission_watermark < 0:
+            raise ValueError("admission_watermark must be >= 0")
+        if self.prefix_cache_blocks is not None and self.prefix_cache_blocks < 1:
+            raise ValueError("prefix_cache_blocks must be >= 1 when set")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,6 +185,17 @@ class SchedStats:
     # path actually reads vs what a padded dense-gather batch would read
     attn_tokens_touched: int = 0
     attn_tokens_padded: int = 0
+    # radix prefix cache: admissions whose prompt matched a cached prefix
+    # (vs missed), prefill tokens skipped outright, and the HBM fill bytes
+    # those skips never streamed (shared formula: prefix_fill_bytes_saved)
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    prefix_hit_tokens: int = 0
+    prefix_inserted_blocks: int = 0
+    prefix_fill_bytes_saved: int = 0
+    # admissions deferred by the free-page low-watermark (soft back-off
+    # before the hard out_of_block_stalls signal)
+    watermark_stalls: int = 0
 
     def packing_efficiency(self, chunk_size: int) -> float:
         """Scheduled tokens / chunk budget — 1.0 means every step was full."""
@@ -179,6 +208,13 @@ class SchedStats:
         if self.attn_tokens_padded == 0:
             return float("nan")
         return 1.0 - self.attn_tokens_touched / self.attn_tokens_padded
+
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admissions that adopted a cached prompt prefix."""
+        total = self.prefix_hits + self.prefix_misses
+        if total == 0:
+            return float("nan")
+        return self.prefix_hits / total
 
 
 class Scheduler:
@@ -193,6 +229,8 @@ class Scheduler:
             beol_bytes=cfg.prefetch_buffer_bytes,
             beol_policy=cfg.beol_policy,
             num_blocks=cfg.num_kv_blocks,
+            enable_prefix_cache=cfg.enable_prefix_cache,
+            prefix_cache_blocks=cfg.prefix_cache_blocks,
         )
         self.planner = PrefetchPlanner(model_cfg, cfg.prefetch_buffer_bytes,
                                        mem=self.mem)
@@ -262,6 +300,40 @@ class Scheduler:
             return self.requests[rid]
         return min(decodes, key=lambda r: (r.priority, -r.arrival_time, -r.rid))
 
+    def _watermark_ok(self) -> bool:
+        """Admission low-watermark: admit new requests only while at least
+        ``admission_watermark`` pool pages are free or reclaimable. Never
+        gates an otherwise-idle system (something must always run)."""
+        wm = self.cfg.admission_watermark
+        if wm <= 0:
+            return True
+        free = self.mem.effective_free_blocks()
+        if free is None or free >= wm:
+            return True
+        return not self.active and not self.swapped
+
+    def _admit_prefix(self, req: Request) -> None:
+        """Match a freshly admitted request's effective prompt against the
+        radix prefix cache; a hit adopts the cached block run as the table
+        prefix and fast-forwards ``prefill_pos`` past the shared tokens (the
+        final token always stays uncached so the finishing chunk computes
+        the first output logits)."""
+        if self.mem.prefix is None:
+            return
+        tokens = req.prefill_slice(0, req.total_prefill_len)
+        matched = self.mem.match_prefix(
+            req.rid, tokens, max_tokens=req.total_prefill_len - 1,
+            step=self.stats.steps)
+        req.cached_prefix_len = matched
+        if matched:
+            req.prefill_pos = matched
+            self.stats.prefix_hits += 1
+            self.stats.prefix_hit_tokens += matched
+            self.stats.prefix_fill_bytes_saved += prefix_fill_bytes_saved(
+                matched, self.mem.kv_bytes_per_token)
+        else:
+            self.stats.prefix_misses += 1
+
     def _release_slot(self, req: Request, plan: StepPlan) -> int:
         """Preemption bookkeeping common to every victim kind: count it and
         free the slot. Returns the released slot id."""
@@ -322,13 +394,15 @@ class Scheduler:
             req = self.swapped[0]
             decode_rids = [r.rid for r in self.active.values()
                            if r.state == State.DECODE]
-            tokens = self.mem.swapped_tokens_of(req.rid)
-            # +1: the restored request decodes (and grows) this very step
-            fits = self.mem.fits_after_growth(decode_rids, extra_tokens=tokens + 1)
+            # pages the restore mints: spilled blocks + this step's decode
+            # growth (kept/shared blocks are still device-resident and
+            # already projected via the swap record)
+            need = self.mem.swap_in_extra_blocks(req.rid)
+            fits = self.mem.fits_after_growth(decode_rids, extra_blocks=need)
             # a forced restore may over-run the soft budget but never the
             # physical pool — attach() would raise OutOfBlocks
             forced = not decode_rids and self.mem.hard_fits_after_growth(
-                decode_rids, extra_tokens=tokens + 1)
+                decode_rids, extra_blocks=need)
             if not (fits or forced):
                 break
             self.swapped.pop(0)
@@ -392,6 +466,7 @@ class Scheduler:
         # the growable token count; admission stalls when no block is free).
         stalled: set = set()  # rids whose chunk was pool-blocked this step
         admission_stalled = False
+        watermark_stalled = False
         while True:
             scheduled: set = set()  # rids already visited this pass
             while budget > 0:
@@ -407,12 +482,21 @@ class Scheduler:
                             self.stats.out_of_block_stalls += 1
                             admission_stalled = True
                         break
+                    if not self._watermark_ok():
+                        # soft back-off: pages exist but sit below the low-
+                        # watermark — defer NEW admissions so running work
+                        # finishes instead of thrashing through shed/re-admit
+                        if not watermark_stalled:
+                            self.stats.watermark_stalls += 1
+                            watermark_stalled = True
+                        break
                     pre = self._pop_waiting()
                     pre.slot = self.free_slots.pop(0)
                     pre.state = State.PREFILL
                     self.active[pre.slot] = pre
                     self.prefilling.append(pre)
                     self.mem.tiers.touch(pre.rid, self.stats.steps)
+                    self._admit_prefix(pre)
                 scheduled.add(pre.rid)
                 take = min(budget, pre.total_prefill_len - pre.prefill_pos)
                 headroom = self.mem.grow_headroom(pre.rid)
@@ -512,6 +596,14 @@ class Scheduler:
                 if req.first_token_time is None:
                     req.first_token_time = now
                 req.token_times.append(now)
+                # the prompt's KV is fully written: index its full blocks in
+                # the radix cache so later shared-prefix admissions fork them
+                # copy-on-write (original prompt only — recompute-restart
+                # output tokens are backend-dependent and never cached)
+                if self.mem.prefix is not None:
+                    self.stats.prefix_inserted_blocks += self.mem.insert_prefix(
+                        req.rid, req.prompt, step=self.stats.steps,
+                        priority=req.priority)
 
         for rid in plan.decode_rids:
             req = self.requests[rid]

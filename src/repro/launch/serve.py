@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.1-8b --reduced \
         --requests 8 --chunk 32
+
+The physical KV page pool is sized from the serving hardware's real HBM
+budget (``--hw``, Table I archs): capacity minus resident weights, divided
+by one page's full-stack KV bytes — capped at the dense-equivalent layout
+(``max_batch * max_len`` tokens), which binds on reduced CPU configs where
+the HBM budget would dwarf what the slots can address. ``--num-kv-blocks``
+overrides the computed size explicitly.
 """
 from __future__ import annotations
 
@@ -12,11 +19,30 @@ import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.configs.reduced import dropless
+from repro.core.packed_step import supports_packed
 from repro.core.scheduler import SchedulerConfig
+from repro.memory.manager import hbm_kv_pool_blocks
 from repro.models import build_model
 from repro.serving.engine import Engine
 from repro.serving.metrics import summarize
 from repro.serving.request import Request
+from repro.serving.workload import shared_prefix_requests
+from repro.sim.hardware import HARDWARE
+
+
+def sized_kv_pool(cfg, hw_name: str, max_batch: int, max_len: int,
+                  kv_block: int):
+    """(pool_blocks, basis) from the arch's HBM budget, dense-capped."""
+    dense_equiv = max_batch * max_len // kv_block
+    budget = hbm_kv_pool_blocks(HARDWARE[hw_name].hbm_bytes, cfg, kv_block)
+    floor = max(1, max_len // kv_block)  # engine needs one max_len context
+    if budget is None:  # attention-free: no paged KV to budget
+        return dense_equiv, "dense"
+    if budget < floor:
+        return floor, "floor"
+    if budget < dense_equiv:
+        return budget, "hbm"
+    return dense_equiv, "dense"
 
 
 def main():
@@ -38,14 +64,26 @@ def main():
                     help="drop-and-re-prefill vs spill-to-host preemption")
     ap.add_argument("--kv-block", type=int, default=1,
                     help="paged KV block size in tokens")
+    ap.add_argument("--hw", choices=sorted(HARDWARE), default="tpuv6e-like",
+                    help="serving hardware whose HBM budget sizes the KV "
+                         "page pool (capacity minus weights)")
     ap.add_argument("--num-kv-blocks", type=int, default=None,
-                    help="physical KV page pool size in blocks (paged path; "
-                         "default max-batch * max-len / kv-block). Smaller "
-                         "pools over-subscribe: admission stalls on "
-                         "OutOfBlocks instead of over-allocating")
+                    help="explicit physical KV page pool size in blocks "
+                         "(paged path; overrides the --hw HBM-budget sizing)."
+                         " Smaller pools over-subscribe: admission stalls on"
+                         " OutOfBlocks instead of over-allocating")
     ap.add_argument("--attn-kernel", choices=["auto", "paged", "dense"], default="auto",
                     help="packed attention path: ragged block-table (paged) "
                          "vs dense cache gather")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache: shared prompt prefixes fork "
+                         "cached pages copy-on-write instead of re-prefilling")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="generate prompts sharing a system prefix of this "
+                         "many tokens (0 = independent random prompts)")
+    ap.add_argument("--admission-watermark", type=int, default=0,
+                    help="free-page low-watermark gating NEW admissions "
+                         "(blocks); reduces shed/re-admit thrash")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -54,18 +92,33 @@ def main():
     cfg = dropless(cfg)  # serving uses dropless MoE dispatch
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+
+    pool, pool_basis = args.num_kv_blocks, "flag"
+    if pool is None and supports_packed(cfg) and args.attn_kernel != "dense":
+        pool, pool_basis = sized_kv_pool(cfg, args.hw, args.max_batch,
+                                         args.max_len, args.kv_block)
     eng = Engine(model, params, SchedulerConfig(
         chunk_size=args.chunk, max_decode_batch=args.max_batch,
         prefetch_buffer_bytes=int(args.prefetch_mb * 2**20),
         max_concurrent_prefills=args.max_prefills, policy=args.policy,
         kv_capacity_tokens=args.kv_capacity, preemption=args.preemption,
-        kv_block_size=args.kv_block, num_kv_blocks=args.num_kv_blocks),
+        kv_block_size=args.kv_block, num_kv_blocks=pool,
+        enable_prefix_cache=args.prefix_cache,
+        admission_watermark=args.admission_watermark),
         max_len=args.max_len, attn_kernel=args.attn_kernel)
     rng = np.random.default_rng(0)
-    for rid in range(args.requests):
-        L = int(rng.integers(8, args.max_len // 2))
-        eng.submit(Request(rid=rid, prompt=rng.integers(0, cfg.vocab_size, L).tolist(),
-                           max_new_tokens=args.max_new))
+    if args.shared_prefix > 0:
+        for req in shared_prefix_requests(
+                args.requests, shared_len=args.shared_prefix,
+                unique_len=max(8, args.max_len // 8),
+                max_new_tokens=args.max_new, vocab_size=cfg.vocab_size):
+            eng.submit(req)
+    else:
+        for rid in range(args.requests):
+            L = int(rng.integers(8, args.max_len // 2))
+            eng.submit(Request(rid=rid,
+                               prompt=rng.integers(0, cfg.vocab_size, L).tolist(),
+                               max_new_tokens=args.max_new))
     eng.run(max_steps=5000)
     m = summarize(eng.scheduler.requests.values(), horizon=float(max(eng.steps_run, 1)),
                   sched_stats=eng.scheduler.stats, chunk_size=args.chunk)
@@ -75,9 +128,15 @@ def main():
     savings = (f"{m['attn_padding_savings']:.2f}" if ragged
                else f"n/a(would_save={m['attn_padding_savings']:.2f})")
     alloc = eng.scheduler.mem.allocator
-    pool = (f"pool={alloc.peak_used_blocks}/{alloc.num_blocks}pages "
-            f"oob_stalls={int(m['out_of_block_stalls'])} "
-            if ragged else "")
+    pool_rep = (f"pool={alloc.peak_used_blocks}/{alloc.num_blocks}pages"
+                f"({pool_basis}:{args.hw}) "
+                f"oob_stalls={int(m['out_of_block_stalls'])} "
+                f"wm_stalls={int(m['watermark_stalls'])} "
+                if ragged else "")
+    prefix_rep = (f"prefix_hit_rate={m['prefix_hit_rate']:.2f} "
+                  f"prefill_skipped={int(m['prefix_tokens_skipped'])}tok "
+                  f"fill_saved={m['prefix_fill_bytes_saved']:.0f}B "
+                  if args.prefix_cache else "")
     print(f"[launch.serve] mode={'packed' if eng.packed_mode else 'two_call'} "
           f"attn={eng.attn_kernel} "
           f"policy={args.policy} steps={eng.steps_run} "
@@ -85,7 +144,8 @@ def main():
           f"pack_eff={m['packing_efficiency']:.2f} "
           f"preemptions={int(m['preemptions'])} "
           f"swaps={int(m['swap_outs'])} "
-          f"{pool}"
+          f"{pool_rep}"
+          f"{prefix_rep}"
           f"attn_savings={savings} "
           f"prefetch_cov={np.mean(eng.prefetch_log):.2f}")
 

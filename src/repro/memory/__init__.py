@@ -1,13 +1,16 @@
-"""Tiered KV-cache memory subsystem: paged block allocator, BEOL/HBM/host
-tier model, and the transfer engine that prices placement deltas as DMA."""
+"""Tiered KV-cache memory subsystem: paged block allocator, radix prefix
+cache (copy-on-write prompt sharing), BEOL/HBM/host tier model, and the
+transfer engine that prices placement deltas as DMA."""
 from repro.memory.block_allocator import (
     BlockAllocator,
     BlockTable,
+    DetachRecord,
     DoubleFree,
     OutOfBlocks,
-    SharedBlocks,
+    prefix_fill_bytes_saved,
 )
-from repro.memory.manager import KVMemoryManager, SwapRecord
+from repro.memory.manager import KVMemoryManager, SwapRecord, hbm_kv_pool_blocks
+from repro.memory.prefix_cache import PrefixCache, PrefixCacheStats
 from repro.memory.tiers import BEOL, HBM, HOST, Placement, TierManager
 from repro.memory.transfers import DMAPlan, DMAReport, Transfer, TransferEngine
 
@@ -19,13 +22,17 @@ __all__ = [
     "BlockTable",
     "DMAPlan",
     "DMAReport",
+    "DetachRecord",
     "DoubleFree",
     "KVMemoryManager",
     "OutOfBlocks",
     "Placement",
-    "SharedBlocks",
+    "PrefixCache",
+    "PrefixCacheStats",
     "SwapRecord",
     "TierManager",
     "Transfer",
     "TransferEngine",
+    "hbm_kv_pool_blocks",
+    "prefix_fill_bytes_saved",
 ]

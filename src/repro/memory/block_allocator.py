@@ -2,10 +2,10 @@
 
 KV storage is carved into fixed-size blocks of ``block_size`` tokens. Each
 request owns a BlockTable — an ordered list of block ids covering its context
-prefix — and blocks are ref-counted so tables can share prefixes (fork).
-The allocator is the scheduler's source of truth for KV occupancy: capacity
-checks, preemption pressure, and swap accounting are all expressed in blocks
-rather than the raw token counter the seed scheduler used.
+prefix — and blocks are ref-counted so tables can share prefixes (fork /
+radix prefix cache). The allocator is the scheduler's source of truth for KV
+occupancy: capacity checks, preemption pressure, and swap accounting are all
+expressed in blocks rather than the raw token counter the seed scheduler used.
 
 Two capacity modes:
   * bounded (``num_blocks`` set): ``grow`` raises OutOfBlocks when the free
@@ -14,11 +14,23 @@ Two capacity modes:
     used by the Scheduler, which enforces *soft* capacity itself (it must be
     able to over-subscribe by design: the last remaining decode is never
     preempted, so a lone long context may legally exceed the budget).
+
+Sharing records (copy-on-write x swap composition): ``detach`` used to
+refuse tables holding shared blocks (the old ``SharedBlocks`` guard),
+because ``attach`` minted fresh private pages and a round trip would have
+silently duplicated shared prefixes. Detach now returns a ``DetachRecord``
+carrying a per-block ``kept`` mask: shared blocks (refcount > 1) KEEP this
+table's reference and stay device-resident — only private blocks spill to
+host. ``attach`` reuses the kept ids verbatim (the record's reference
+transfers back to the table) and mints fresh ids only for the spilled tail,
+so a forked / prefix-cached table swaps out and back without ever
+duplicating shared pages and the engine only moves the private pages over
+the host link.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 
 def swap_bytes_block_rounded(tokens: int, block_size: int,
@@ -32,24 +44,21 @@ def swap_bytes_block_rounded(tokens: int, block_size: int,
     return int(bs * -(-int(tokens) // bs) * kv_bytes_per_token)
 
 
+def prefix_fill_bytes_saved(tokens_skipped: int, kv_bytes_per_token: float) -> int:
+    """HBM fill bytes a prefix-cache hit avoids for ``tokens_skipped`` prompt
+    tokens: the full-stack KV write traffic those tokens' prefill would have
+    streamed into HBM. Single source of truth for the savings number — the
+    scheduler's stats, the service simulator, and the benchmarks all price
+    the skip through this, so sim and engine agree by construction."""
+    return int(max(0, tokens_skipped) * kv_bytes_per_token)
+
+
 class OutOfBlocks(RuntimeError):
     """Bounded allocator exhausted."""
 
 
 class DoubleFree(RuntimeError):
     """A block's refcount would go negative, or a table was freed twice."""
-
-
-class SharedBlocks(RuntimeError):
-    """A swap (detach) was attempted on a table holding shared blocks.
-
-    Swap-in (``attach``) mints *fresh private* blocks for the restored table,
-    so a detach/attach round-trip of a forked table would silently duplicate
-    previously shared blocks — the fork's copy-on-write link would be broken
-    and device occupancy double-counted. Until host-side sharing is tracked,
-    swapping a table that shares blocks (or whose blocks another table still
-    references) is refused; callers must free the fork first or pick another
-    swap victim."""
 
 
 @dataclasses.dataclass
@@ -70,6 +79,38 @@ class BlockTable:
     def slack_tokens(self, block_size: int) -> int:
         """Reserved-but-unused tokens in the tail block (internal fragmentation)."""
         return self.capacity_tokens(block_size) - self.num_tokens
+
+    def block_tokens(self, i: int, block_size: int) -> int:
+        """Written tokens block ``i`` of this table holds."""
+        return max(0, min(block_size, self.num_tokens - i * block_size))
+
+
+@dataclasses.dataclass
+class DetachRecord:
+    """A detached (swapped-out) table plus its sharing record.
+
+    ``kept[i]`` is True when block ``table.blocks[i]`` was shared at detach
+    time: it stayed device-resident and this record still holds its
+    reference (the other owners — forks, radix-cache nodes — may free
+    theirs meanwhile; the record's reference keeps the content alive).
+    Blocks with ``kept[i]`` False were private: they returned to the free
+    list and their contents must round-trip through host DRAM."""
+
+    table: BlockTable
+    kept: List[bool]
+
+    @property
+    def spilled_indices(self) -> List[int]:
+        return [i for i, k in enumerate(self.kept) if not k]
+
+    @property
+    def kept_blocks(self) -> List[int]:
+        return [b for b, k in zip(self.table.blocks, self.kept) if k]
+
+    def spilled_tokens(self, block_size: int) -> int:
+        """Written tokens living in the spilled (host-bound) blocks."""
+        return sum(self.table.block_tokens(i, block_size)
+                   for i in self.spilled_indices)
 
 
 class BlockAllocator:
@@ -94,11 +135,32 @@ class BlockAllocator:
 
     @property
     def used_blocks(self) -> int:
+        """Physical blocks in use — each block counted ONCE however many
+        tables / cache nodes / swap records share it."""
         return len(self.ref_count)
 
     @property
     def used_tokens(self) -> int:
+        """Table-summed token count (shared prefixes counted per table).
+        Use ``physical_used_tokens`` for occupancy that counts shared
+        pages once."""
         return sum(t.num_tokens for t in self.tables.values())
+
+    def block_fill(self) -> Dict[int, int]:
+        """Per-physical-block written tokens, from the live tables' view:
+        a block shared by several tables is as full as its fullest owner
+        says (prefix sharing is full-block-aligned, so owners agree)."""
+        fill: Dict[int, int] = {}
+        for t in self.tables.values():
+            for i, bid in enumerate(t.blocks):
+                tok = t.block_tokens(i, self.block_size)
+                if tok > fill.get(bid, 0):
+                    fill[bid] = tok
+        return fill
+
+    def physical_used_tokens(self) -> int:
+        """Written tokens across live tables with shared blocks counted once."""
+        return sum(self.block_fill().values())
 
     @property
     def free_blocks(self) -> Optional[int]:
@@ -108,11 +170,13 @@ class BlockAllocator:
         return self.num_blocks - self.used_blocks
 
     def fragmentation(self) -> float:
-        """Internal fragmentation: reserved-but-unused fraction of used blocks."""
-        cap = self.used_blocks * self.block_size
+        """Internal fragmentation: reserved-but-unused fraction of the live
+        tables' physical blocks (shared pages counted once)."""
+        fill = self.block_fill()
+        cap = len(fill) * self.block_size
         if cap == 0:
             return 0.0
-        return 1.0 - self.used_tokens / cap
+        return 1.0 - sum(fill.values()) / cap
 
     # ------------------------------------------------------------ allocation
     def _mint(self) -> int:
@@ -172,23 +236,79 @@ class BlockAllocator:
         self.tables[dst_rid] = dst
         return dst
 
+    # -------------------------------------------------- external references
+    # The radix prefix cache holds its own reference on each cached block so
+    # cached prefixes survive their inserting request; a request admitted
+    # with a cache hit *adopts* the matched block run as its table prefix.
+    def incref(self, bid: int) -> None:
+        """Add an external (non-table) reference to a live block."""
+        rc = self.ref_count.get(bid)
+        if rc is None:
+            raise DoubleFree(f"block {bid} is not live; cannot reference it")
+        self.ref_count[bid] = rc + 1
+
+    def decref(self, bid: int) -> bool:
+        """Drop an external reference; returns True when the block was the
+        last reference and returned to the free list."""
+        rc = self.ref_count.get(bid)
+        if rc is None:
+            raise DoubleFree(f"block {bid} already free")
+        if rc == 1:
+            del self.ref_count[bid]
+            self._free.append(bid)
+            self.freed_blocks_total += 1
+            return True
+        self.ref_count[bid] = rc - 1
+        return False
+
+    def adopt(self, rid: int, blocks: List[int], num_tokens: int) -> BlockTable:
+        """Create rid's table from EXISTING block ids (a matched prefix-cache
+        run): each block gains a reference; ``num_tokens`` must cover the
+        blocks exactly (prefix sharing is full-block-aligned, so the adopted
+        run carries no writable slack — the first suffix token mints a fresh
+        private block and shared pages are never scribbled)."""
+        if rid in self.tables:
+            raise ValueError(f"rid {rid} already has a table")
+        if num_tokens != len(blocks) * self.block_size:
+            raise ValueError(
+                f"adopted prefix must be full-block-aligned: {num_tokens} "
+                f"tokens vs {len(blocks)} blocks of {self.block_size}")
+        for bid in blocks:
+            self.incref(bid)
+        t = BlockTable(rid, blocks=list(blocks), num_tokens=num_tokens)
+        self.tables[rid] = t
+        return t
+
+    # ------------------------------------------------------------- lifecycle
     def free(self, rid: int) -> int:
         """Release rid's table; returns blocks actually returned to the free
         list (shared blocks stay live until their last owner frees)."""
         return self._release(rid)[1]
 
-    def detach(self, rid: int) -> BlockTable:
-        """Remove rid's table, recycling its device blocks (swap-out: the
-        token count moves to another tier's bookkeeping; use ``attach`` to
-        re-admit). Raises ``SharedBlocks`` if any block is shared with
-        another table — see the error's docstring for why a forked table
-        cannot round-trip through swap."""
-        t = self.tables.get(rid)
-        if t is not None and any(self.ref_count.get(b, 0) > 1 for b in t.blocks):
-            raise SharedBlocks(
-                f"rid {rid} shares blocks with another table; swap would "
-                "break copy-on-write sharing (free the fork first)")
-        return self._release(rid)[0]
+    def detach(self, rid: int) -> DetachRecord:
+        """Remove rid's table for swap-out. Private blocks (refcount 1)
+        return to the free list — their contents round-trip through host
+        DRAM. Shared blocks keep this table's reference and stay device
+        resident (see ``DetachRecord``), so copy-on-write sharing and swap
+        compose without duplicating pages."""
+        t = self.tables.pop(rid, None)
+        if t is None:
+            raise DoubleFree(f"rid {rid} has no table (already freed?)")
+        kept: List[bool] = []
+        released = 0
+        for bid in t.blocks:
+            rc = self.ref_count.get(bid)
+            if rc is None:
+                raise DoubleFree(f"block {bid} already free")
+            if rc > 1:
+                kept.append(True)  # reference moves from table to record
+            else:
+                del self.ref_count[bid]
+                self._free.append(bid)
+                released += 1
+                kept.append(False)
+        self.freed_blocks_total += released
+        return DetachRecord(table=t, kept=kept)
 
     def _release(self, rid: int):
         t = self.tables.pop(rid, None)
@@ -208,13 +328,49 @@ class BlockAllocator:
         self.freed_blocks_total += released
         return t, released
 
-    def attach(self, table: BlockTable) -> BlockTable:
-        """Re-admit a detached table (swap-in): fresh device blocks are
-        allocated for its token count; block *count* round-trips exactly."""
+    def attach(self, record: Union[DetachRecord, BlockTable]) -> BlockTable:
+        """Re-admit a detached table (swap-in). Kept (shared) blocks reuse
+        their ids verbatim — the record's reference transfers back to the
+        table, no bytes move. Spilled blocks get freshly minted ids at the
+        same positions; the engine scatters the host copies into exactly
+        those. Block count round-trips exactly. Transactional: on
+        OutOfBlocks nothing changes and the record stays parked (kept
+        references included)."""
+        if isinstance(record, BlockTable):  # legacy: a fully private table
+            record = DetachRecord(table=record,
+                                  kept=[False] * record.num_blocks)
+        table = record.table
         if table.rid in self.tables:
             raise ValueError(f"rid {table.rid} already has a table")
-        fresh = BlockTable(table.rid)
+        new_blocks: List[int] = []
+        minted: List[int] = []
+        try:
+            for bid, kept in zip(table.blocks, record.kept):
+                if kept:
+                    new_blocks.append(bid)
+                else:
+                    nb = self._mint()
+                    self.ref_count[nb] = 1
+                    minted.append(nb)
+                    new_blocks.append(nb)
+        except OutOfBlocks:
+            for nb in reversed(minted):
+                del self.ref_count[nb]
+                self._free.append(nb)
+            raise
+        fresh = BlockTable(table.rid, blocks=new_blocks,
+                           num_tokens=table.num_tokens)
         self.tables[table.rid] = fresh
-        tokens, fresh.num_tokens = table.num_tokens, 0
-        self.grow(table.rid, tokens)
+        self.allocated_blocks_total += len(minted)
+        self.peak_used_blocks = max(self.peak_used_blocks, self.used_blocks)
         return fresh
+
+    def release_record(self, record: DetachRecord) -> int:
+        """Discard a parked record without re-attaching (the swapped request
+        was aborted/freed): drop the kept blocks' references."""
+        released = 0
+        for bid in record.kept_blocks:
+            if self.decref(bid):
+                released += 1
+        record.kept = [False] * record.table.num_blocks
+        return released

@@ -61,15 +61,6 @@ def _page_bucket(n: int) -> int:
     return m
 
 
-def _saved_page_count(saved: dict) -> int:
-    """Padded page rows a host swap copy holds (per-key axis aware)."""
-    for k, sub in saved.items():
-        leaves = jax.tree.leaves(sub)
-        if leaves:
-            return leaves[0].shape[_batch_axis(k)]
-    return 0
-
-
 def _init_page_pool(model, n_pages: int, page_size: int, dtype):
     """Allocate KV as a physical page pool: every cache leaf becomes
     (n_pages, page_size, heads, head_dim) (period caches keep their leading
@@ -153,6 +144,14 @@ class Engine:
                 "attn_kernel='paged' needs packed mode and max_len divisible "
                 f"by kv_block_size (max_len={max_len}, block={self.page_size})"
             )
+        if sched_cfg.enable_prefix_cache and attn_kernel != "paged":
+            # dense slot caches and two-call SSM states have no shared pages
+            # a forked block table could point at — skipping "cached" tokens
+            # would read garbage KV
+            raise ValueError(
+                "enable_prefix_cache requires the physically paged engine "
+                "path (attn_kernel='paged'); dense/two-call KV has no "
+                "copy-on-write pages to share")
         self.attn_kernel = attn_kernel
 
         if self.attn_kernel == "paged":
@@ -302,17 +301,26 @@ class Engine:
 
     def _apply_swaps(self, plan: StepPlan) -> None:
         """Execute the plan's swap traffic on the KV storage before the
-        compute call. Paged mode moves whole pages: a swap-out gathers
-        exactly the pages the victim's (now detached) table named; a swap-in
-        scatters the host copy into the *fresh* pages ``attach()`` minted —
-        physical ids differ across the round trip, contents stay
-        token-identical. Dense mode moves whole slot rows. Outs run first so
-        a swap-in may reuse just-freed pages/slots within the same step."""
+        compute call. Paged mode moves whole pages — but only the *spilled*
+        (private) ones: shared pages (forked prefixes, radix-cache blocks)
+        stay device-resident across the round trip, pinned by the detach
+        record's kept references. A swap-out gathers exactly the spilled
+        pages the victim's record names; a swap-in scatters the host copies
+        into the fresh pages ``attach()`` minted at the same table
+        positions — physical ids differ across the round trip, contents
+        stay token-identical. Dense mode moves whole slot rows. Outs run
+        first so a swap-in may reuse just-freed pages/slots within the same
+        step."""
         if self.attn_kernel == "paged":
             mem = self.scheduler.mem
             scratch = self._scratch_page
             for rid, _slot in plan.swapped_out:
-                blocks = mem.swapped[rid].table.blocks
+                rec = mem.swapped[rid].record
+                idx = rec.spilled_indices
+                if not idx:  # fully shared table: nothing crosses the link
+                    self.swap_store[rid] = {"kv": None, "idx": idx}
+                    continue
+                blocks = [rec.table.blocks[i] for i in idx]
                 n = len(blocks)
                 ids = np.full((_page_bucket(n),), scratch, np.int32)
                 ids[:n] = blocks
@@ -320,29 +328,34 @@ class Engine:
                 # the pow2 id bucket bounds jit recompiles, but only the
                 # live pages cross the host link: slice on device, then
                 # transfer — matching the block-rounded bytes the sim prices
-                self.swap_store[rid] = jax.device_get({
+                self.swap_store[rid] = {"idx": idx, "kv": jax.device_get({
                     k: jax.tree.map(
                         lambda l, a=_batch_axis(k): jax.lax.slice_in_dim(
                             l, 0, n, axis=a),
                         gathered[k],
                     )
                     for k in gathered
-                })
+                })}
             for rid, _slot in plan.swapped_in:
-                saved = self.swap_store.pop(rid)
+                entry = self.swap_store.pop(rid)
+                saved, idx = entry["kv"], entry["idx"]
+                if not idx:
+                    continue  # every page stayed resident; table reuses them
                 blocks = mem.allocator.tables[rid].blocks
-                # scatter into the *fresh* pages attach() minted. The host
-                # copy holds exactly the live pages; pad it (and the id
+                # scatter into the *fresh* pages attach() minted at the same
+                # table positions the spill recorded (kept pages re-entered
+                # with their original ids and need no copy). The host copy
+                # holds exactly the spilled pages; pad it (and the id
                 # vector, with the scratch page) back to the pow2 bucket so
                 # the compiled scatter is reused — scratch receives zeros it
                 # never meaningfully serves. If the table already grew one
                 # extra page for this step's decode write, that page needs
                 # no restore: it only covers positions at/after the restored
                 # context, which stay masked until the compute writes them.
-                n = _saved_page_count(saved)
+                n = len(idx)
                 m = _page_bucket(n)
                 ids = np.full((m,), scratch, np.int32)
-                ids[:n] = blocks[:n]
+                ids[:n] = [blocks[i] for i in idx]
                 if m != n:
                     saved = {
                         k: jax.tree.map(

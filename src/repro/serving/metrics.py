@@ -45,6 +45,7 @@ def summarize(requests: Iterable[Request], horizon: float,
     if sched_stats is not None:
         m["preemptions"] = float(sched_stats.preemptions)
         m["preempted_tokens"] = float(sched_stats.preempted_tokens)
+        m["prefill_tokens"] = float(sched_stats.prefill_tokens)
         m["steps"] = float(sched_stats.steps)
         m["swap_outs"] = float(sched_stats.swap_outs)
         m["swap_ins"] = float(sched_stats.swap_ins)
@@ -60,6 +61,19 @@ def summarize(requests: Iterable[Request], horizon: float,
         # bounded physical pool: admissions/chunks deferred because the
         # allocator had no free page (0 forever when the pool is unbounded)
         m["out_of_block_stalls"] = float(sched_stats.out_of_block_stalls)
+        # admission low-watermark back-off (0 forever when disabled)
+        m["watermark_stalls"] = float(sched_stats.watermark_stalls)
+        # radix prefix cache: hit rate over admissions, prefill tokens the
+        # matched prefixes skipped outright, and the HBM fill bytes those
+        # skips never streamed. Priced by the shared formula
+        # (memory.prefix_fill_bytes_saved), so the engine and the service
+        # simulator report identical savings for identical schedules.
+        m["prefix_hits"] = float(sched_stats.prefix_hits)
+        m["prefix_misses"] = float(sched_stats.prefix_misses)
+        m["prefix_hit_rate"] = sched_stats.prefix_hit_rate()
+        m["prefix_tokens_skipped"] = float(sched_stats.prefix_hit_tokens)
+        m["prefix_inserted_blocks"] = float(sched_stats.prefix_inserted_blocks)
+        m["prefix_fill_bytes_saved"] = float(sched_stats.prefix_fill_bytes_saved)
         if chunk_size is not None:
             m["packing_efficiency"] = sched_stats.packing_efficiency(chunk_size)
     if mem_stats:

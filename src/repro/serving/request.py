@@ -39,6 +39,9 @@ class Request:
     restart_output_len: int = 0  # output tokens baked into the current prefill
     preemptions: int = 0  # times this request was preempted (either kind)
     swaps: int = 0  # times this request was swapped out to host
+    # prompt tokens adopted from the radix prefix cache at the most recent
+    # admission (copy-on-write shared pages; prefill skips them entirely)
+    cached_prefix_len: int = 0
 
     # timing (engine: wall clock; sim: simulated seconds)
     schedule_time: Optional[float] = None  # first time any chunk ran

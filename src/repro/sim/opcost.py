@@ -14,11 +14,19 @@ from typing import List, Optional, Sequence, Tuple
 
 from repro.configs.base import LayerSpec, ModelConfig
 
-# Page-granular swap pricing shared with the engine's memory manager. The
-# single source of truth lives in repro.memory.block_allocator (it describes
-# how the allocator's pages round a token count); re-exported here so sim
-# pricing code keeps one import surface alongside kv_tokens_touched.
-from repro.memory.block_allocator import swap_bytes_block_rounded  # noqa: F401
+# Page-granular swap pricing and prefix-cache fill savings shared with the
+# engine's memory manager. The single source of truth lives in
+# repro.memory.block_allocator (it describes how the allocator's pages round
+# a token count, and what a skipped prefill never streams); re-exported here
+# so sim pricing code keeps one import surface alongside kv_tokens_touched.
+# Pricing skipped prefill through the scheduler is structural: a prefix-
+# cache hit shrinks the StepPlan's prefill segments, so stage_ops never see
+# the cached tokens — the sim skips their FLOPs and HBM fill bytes exactly
+# where the engine skips their compute.
+from repro.memory.block_allocator import (  # noqa: F401
+    prefix_fill_bytes_saved,
+    swap_bytes_block_rounded,
+)
 from repro.sim.hardware import Hardware
 
 BYTES = 2  # fp16 inference (paper)

@@ -77,7 +77,7 @@ class _StageCostCache:
 def simulate_service(
     hw: Hardware,
     cfg: ModelConfig,
-    workload: WorkloadSpec,
+    workload: Optional[WorkloadSpec],
     qps: float,
     mode: str,  # "packed" | "packed_prefetch"
     n_requests: int = 200,
@@ -93,18 +93,30 @@ def simulate_service(
     eviction: str = "priority",
     kv_block_size: int = 1,
     beol_policy: str = "longest",
+    num_kv_blocks: Optional[int] = None,
+    enable_prefix_cache: bool = False,
+    prefix_cache_blocks: Optional[int] = None,
+    admission_watermark: int = 0,
+    requests=None,  # explicit request list overrides workload sampling —
+    # lets benchmarks drive the sim and the real engine over the SAME
+    # shared-prefix requests so their schedules (and savings) coincide
 ) -> ServiceResult:
     buffer_bytes = hw.prefetch_buffer if prefetch_buffer is None else prefetch_buffer
     if mode == "packed":
         buffer_bytes = 0.0
-    reqs = sample_requests(workload, n_requests, qps, seed=seed)
+    reqs = (requests if requests is not None
+            else sample_requests(workload, n_requests, qps, seed=seed))
     sched = Scheduler(
         SchedulerConfig(chunk_size=chunk, max_decode_batch=max_decode_batch,
                         prefetch_buffer_bytes=int(buffer_bytes),
                         max_concurrent_prefills=max_concurrent_prefills,
                         policy=policy, kv_capacity_tokens=kv_capacity_tokens,
                         preemption=preemption, eviction=eviction,
-                        kv_block_size=kv_block_size, beol_policy=beol_policy),
+                        kv_block_size=kv_block_size, beol_policy=beol_policy,
+                        num_kv_blocks=num_kv_blocks,
+                        enable_prefix_cache=enable_prefix_cache,
+                        prefix_cache_blocks=prefix_cache_blocks,
+                        admission_watermark=admission_watermark),
         cfg,
     )
     costs = _StageCostCache(hw, cfg, mode, buffer_bytes)
@@ -149,13 +161,13 @@ def simulate_service(
                                       len(plan.decode_rids), kv_d,
                                       buffer=retained + fill)
         # swap traffic moves whole pages of *written* KV (the engine gathers
-        # and scatters page-granular copies) — price it from the memory
-        # manager's block-rounded byte count, not the per-token context
-        swap_out_b = sum(sched.mem.swap_bytes(sched.mem.swapped_tokens_of(r))
+        # and scatters page-granular copies) — and only the SPILLED pages:
+        # shared blocks (forked prefixes, radix-cache nodes) stay device-
+        # resident via the detach record's kept references, so they never
+        # cross the host link in either direction
+        swap_out_b = sum(sched.mem.swap_host_bytes(r)
                          for r, _ in plan.swapped_out)
-        # a restored table already holds this step's +1 decode reservation;
-        # the host link only moved the previously written tokens
-        swap_in_b = sum(sched.mem.swap_bytes(max(0, sched.mem.tokens_of(r) - 1))
+        swap_in_b = sum(sched.mem.restored_host_bytes(r)
                         for r, _ in plan.swapped_in)
         report = dma.price(dma.build(fill, swap_out_b, swap_in_b), step_t, step_hbm)
         if report.fill_shortfall_bytes > 0:
@@ -179,8 +191,13 @@ def simulate_service(
         swapped_bytes += report.swap_bytes
         fills_moved += report.earned_fill_bytes
         if pf is not None and pf.total_tokens > 0 and pf.kv_bytes_per_token_layer:
-            kv_want += pf.total_tokens * pf.kv_bytes_per_token_layer
-            kv_hit += retained + report.earned_fill_bytes
+            want_step = pf.total_tokens * pf.kv_bytes_per_token_layer
+            kv_want += want_step
+            # residency/fills are priced per sharer while the demand
+            # denominator counts each shared physical page once (prefix-
+            # cache dedup), so cap the hit numerator at the step's demand —
+            # one BEOL copy cannot serve more bytes than were asked for
+            kv_hit += min(retained + report.earned_fill_bytes, want_step)
         # emit tokens
         for rid in plan.decode_rids:
             sched.requests[rid].output.append(0)
@@ -197,6 +214,7 @@ def simulate_service(
         "prefetch_fill_bytes": fills_moved,
         "kv_fragmentation": sched.mem.fragmentation(),
         "over_capacity_steps": float(sched.mem.over_capacity_steps),
+        "prefix_cached_blocks": float(sched.mem.prefix_cached_blocks),
     }
     m = summarize(sched.requests.values(), horizon=max(t, 1e-9),
                   sched_stats=sched.stats, chunk_size=chunk, mem_stats=mem_stats)

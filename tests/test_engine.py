@@ -233,7 +233,10 @@ def test_engine_swap_restore_is_block_exact():
             out_ids[rid] = list(sch.mem.swapped[rid].table.blocks)
         eng._apply_swaps(plan)
         for rid, _ in plan.swapped_out:
-            snapshots[rid] = jax.tree.map(np.copy, eng.swap_store[rid])
+            # no prefix sharing here: every page is private, so the host
+            # copy covers the full table (idx == all block positions)
+            assert eng.swap_store[rid]["idx"] == list(range(len(out_ids[rid])))
+            snapshots[rid] = jax.tree.map(np.copy, eng.swap_store[rid]["kv"])
         for rid, _slot in plan.swapped_in:
             table = sch.mem.allocator.tables[rid]
             in_ids[rid] = list(table.blocks)

@@ -17,7 +17,7 @@ from _compat import given, settings, st
 
 from repro.configs import get_config, reduce_config
 from repro.core.scheduler import Scheduler, SchedulerConfig
-from repro.memory import BlockAllocator, SharedBlocks
+from repro.memory import BlockAllocator
 from repro.models import build_model
 from repro.serving import sampling
 from repro.serving.engine import Engine
@@ -28,35 +28,56 @@ MAX_LEN = 64
 
 
 # ---------------------------------------------------------------------------
-# allocator: swap vs fork (copy-on-write sharing must not silently duplicate)
+# allocator: swap x fork composition via sharing records (copy-on-write
+# sharing must never silently duplicate shared pages)
 # ---------------------------------------------------------------------------
 
 
-def test_detach_refuses_shared_blocks():
-    """fork -> swap_out would mint private copies of shared blocks on the
-    way back in; the allocator refuses the detach in both directions."""
+def test_detach_keeps_shared_blocks_resident():
+    """Detaching a forked table pins the shared blocks on device via the
+    record's kept references — only private blocks spill, and the round
+    trip reuses the shared ids verbatim (no duplication)."""
     alloc = BlockAllocator(block_size=4)
     alloc.grow(0, 12)
     alloc.fork(0, 1)
-    with pytest.raises(SharedBlocks):
-        alloc.detach(0)
-    with pytest.raises(SharedBlocks):
-        alloc.detach(1)
-    # tables are intact after the refused swap
+    shared = list(alloc.tables[0].blocks)
+    rec = alloc.detach(0)
+    assert rec.kept == [True, True, True]
+    assert rec.spilled_indices == []
+    # shared blocks stayed live (fork + record each hold a reference)
+    assert all(alloc.ref_count[b] == 2 for b in shared)
+    restored = alloc.attach(rec)
+    assert restored.blocks == shared  # ids reused, nothing re-minted
     assert alloc.tables[0].blocks == alloc.tables[1].blocks
-    # once the fork releases its reference, swap round-trips block-exactly
-    alloc.free(1)
-    table = alloc.detach(0)
-    alloc.attach(table)
-    assert alloc.tables[0].num_blocks == table.num_blocks
+
+
+def test_detach_spills_only_private_tail():
+    """A fork that diverged swaps out moving ONLY its private tail pages;
+    the shared prefix never leaves the device."""
+    alloc = BlockAllocator(block_size=4)
+    alloc.grow(0, 8)  # 2 shared blocks
+    alloc.fork(0, 1)
+    alloc.grow(1, 9)  # fork's private tail: blocks 2..4 (17 tokens total)
+    prefix = list(alloc.tables[0].blocks)
+    tail = alloc.tables[1].blocks[2:]
+    rec = alloc.detach(1)
+    assert rec.kept == [True, True, False, False, False]
+    assert [rec.table.blocks[i] for i in rec.spilled_indices] == tail
+    assert rec.spilled_tokens(4) == 9  # only the private tokens cross host
+    # prefix pinned on device; tail pages recycled
+    assert all(b in alloc.ref_count for b in prefix)
+    assert all(b not in alloc.ref_count for b in tail)
+    restored = alloc.attach(rec)
+    assert restored.blocks[:2] == prefix  # shared ids reused verbatim
+    assert restored.num_tokens == 17
 
 
 @settings(deadline=None, max_examples=30)
 @given(data=st.data(), block_size=st.integers(1, 8))
 def test_fork_swap_property(data, block_size):
-    """Property: for any grow/fork history, detach raises iff the table
-    shares at least one block, and a permitted detach/attach round trip
-    preserves token and block counts."""
+    """Property: for any grow/fork history, a detach/attach round trip
+    preserves token and block counts, keeps exactly the shared blocks
+    device-resident (ids reused), and never duplicates a shared page."""
     alloc = BlockAllocator(block_size)
     alloc.grow(0, data.draw(st.integers(1, 50)))
     forked = data.draw(st.booleans())
@@ -64,16 +85,17 @@ def test_fork_swap_property(data, block_size):
         alloc.fork(0, 1)
         if data.draw(st.booleans()):
             alloc.grow(1, data.draw(st.integers(1, 20)))  # fork diverges
-    shares = any(alloc.ref_count[b] > 1 for b in alloc.tables[0].blocks)
-    if shares:
-        with pytest.raises(SharedBlocks):
-            alloc.detach(0)
-        assert 0 in alloc.tables  # refused swap leaves the table live
-    else:
-        before = (alloc.tables[0].num_tokens, alloc.tables[0].num_blocks)
-        t = alloc.detach(0)
-        alloc.attach(t)
-        assert (alloc.tables[0].num_tokens, alloc.tables[0].num_blocks) == before
+    shared = [b for b in alloc.tables[0].blocks if alloc.ref_count[b] > 1]
+    before = (alloc.tables[0].num_tokens, alloc.tables[0].num_blocks)
+    used_before = alloc.used_blocks
+    rec = alloc.detach(0)
+    assert rec.kept_blocks == shared
+    restored = alloc.attach(rec)
+    assert (restored.num_tokens, restored.num_blocks) == before
+    # shared prefix ids reused; physical usage round-trips exactly (a
+    # duplicated shared page would show up as extra used blocks)
+    assert [b for b, k in zip(restored.blocks, rec.kept) if k] == shared
+    assert alloc.used_blocks == used_before
 
 
 # ---------------------------------------------------------------------------
