@@ -99,7 +99,8 @@ def preemption_report(print_fn=print, fast: bool = False):
     cfg = get_config("llama3.1-8b")
     hw = TPUV6E
     print_fn("fig7mem,model,dataset,preemption,policy,preemptions,swaps,"
-             "tier_hit,swap_gb,hbm_tb_moved,hbm_tb_saved,tbt_p99_ms")
+             "tier_hit,swap_gb,hbm_tb_moved,hbm_tb_saved,tbt_p99_ms,"
+             "overlap_eff,prefetch_stall_ms")
     results = {}
     for wl in (OPENCHAT_SHAREGPT4,):
         for pre, policy in PREEMPTION_GRID:
@@ -116,7 +117,8 @@ def preemption_report(print_fn=print, fast: bool = False):
                 f"{int(m['preemptions'])},{int(m['swap_outs'])},"
                 f"{m['tier_hit_rate']:.3f},{m['swapped_bytes']/1e9:.2f},"
                 f"{m['hbm_bytes_moved']/1e12:.2f},{m['hbm_bytes_saved']/1e12:.2f},"
-                f"{m['tbt_p99']*1e3:.2f}"
+                f"{m['tbt_p99']*1e3:.2f},{m['overlap_efficiency']:.3f},"
+                f"{m['prefetch_stall_ms']:.2f}"
             )
     return results
 

@@ -30,7 +30,8 @@ def main() -> None:
 
     from benchmarks import (fig5_stage_latency, fig6_memory_sweep,
                             fig7_service_throughput, fig8_chunk_tradeoff,
-                            kernels_micro, prefix_cache_bench, roofline)
+                            kernels_micro, overlap_bench, prefix_cache_bench,
+                            roofline)
 
     kernels_json = os.path.join(args.json_dir, "BENCH_kernels.json")
     sections = [
@@ -45,6 +46,11 @@ def main() -> None:
         # strictly fewer HBM fill bytes, engine and sim agreeing
         ("prefix_cache", lambda: prefix_cache_bench.run(smoke=args.smoke,
                                                         json_path=kernels_json)),
+        # async KV prefetch: DMA/compute overlap on an over-subscribed swap
+        # workload — asserts wall < serial sum, wall within 10% of
+        # max(compute, transfer), and token-identity async on vs off
+        ("overlap", lambda: overlap_bench.run(smoke=args.smoke,
+                                              json_path=kernels_json)),
         ("roofline", lambda: roofline.run()),
     ]
     failed = []

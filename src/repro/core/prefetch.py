@@ -69,6 +69,17 @@ class PrefetchPlan:
         return min(1.0, self.resident_total / self.total_tokens)
 
     @property
+    def effective_coverage(self) -> Optional[float]:
+        """``coverage`` with the vacuous case made explicit: ``None`` when
+        the step had zero plannable bytes (attention-free arch or an empty
+        decode set).  Averages (``metrics.summarize``'s ``prefetch_coverage``
+        / overlap efficiency) must exclude these steps — a vacuous 1.0 would
+        inflate them on idle steps."""
+        if self.total_tokens == 0:
+            return None
+        return self.coverage
+
+    @property
     def prefetch_bytes(self) -> int:
         """Bytes the schedule wants resident for the next attention op."""
         return self.resident_total * self.kv_bytes_per_token_layer

@@ -28,7 +28,25 @@ continuous batching over multiple prefills):
   * prefetch: each StepPlan carries a PrefetchPlan for the *next* attention
     op's KV (one-layer lookahead) planned over the BEOL tier's block
     residency — retained blocks are BEOL hits, the delta is a fill the
-    transfer engine must earn from residual bandwidth.
+    transfer engine must earn from residual bandwidth;
+  * async prefetch (``async_prefetch=True``): the scheduler additionally
+    plans one step ahead through the in-flight/landed transfer ledger
+    (repro.memory.prefetch_queue) — while step N computes, it issues
+    intents for step N+1's swap-in restores and prefix-cache re-adoptions
+    so the engine/sim can move those bytes early; the consuming step
+    verifies landed-state and stalls for any late remainder (never reads
+    pages whose transfer has not landed).
+
+Invariants the engine and simulator both rely on:
+  * block tables grow in ``next_step`` covering exactly this step's writes —
+    between steps ``mem.tokens_of(rid)`` equals the KV tokens actually
+    written (no phantom +1 reservation);
+  * an empty plan implies no state changed (safe to idle);
+  * every ledger transfer consumed by a step was either landed (overlapped)
+    or explicitly accounted as late/synchronous — a restore is never
+    silently free;
+  * greedy outputs are token-identical across preemption modes, prefix-cache
+    on/off, and async prefetch on/off.
 """
 from __future__ import annotations
 
@@ -39,6 +57,13 @@ from repro.configs.base import ModelConfig
 from repro.core.prefetch import PrefetchPlan, PrefetchPlanner
 from repro.memory.block_allocator import prefix_fill_bytes_saved
 from repro.memory.manager import KVMemoryManager
+from repro.memory.prefetch_queue import (
+    ADOPT,
+    SWAP_IN,
+    ConsumeReceipt,
+    PrefetchQueue,
+    PrefetchTransfer,
+)
 from repro.serving.request import Request, State
 from repro.sim.opcost import kv_tokens_touched
 
@@ -89,6 +114,14 @@ class SchedulerConfig:
     # signal and shed/re-admit thrash shrinks. 0 disables; in-flight work
     # and an idle system are never gated (progress guarantee).
     admission_watermark: int = 0
+    # asynchronous prefetch: plan transfers ONE STEP AHEAD through the
+    # in-flight/landed ledger — next-step swap-in restores and prefix-cache
+    # re-adoptions are issued while the current step computes, so their DMA
+    # overlaps compute (engine: staged host->device copies; sim: residual-
+    # bandwidth transfers with explicit prefetch_stall for late landings).
+    # False restores the fully synchronous PR 2 pricing/copy path; greedy
+    # outputs are token-identical either way.
+    async_prefetch: bool = True
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -138,6 +171,12 @@ class StepPlan:
     swapped_in: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
     prefetch: Optional[PrefetchPlan] = None
     prefetch_committed: bool = False  # BEOL placement landed (sim or engine)
+    # async-prefetch ledger traffic this step: transfers ISSUED now for the
+    # NEXT step's consumers (the engine stages their copies while this
+    # step's compute runs), and receipts for transfers CONSUMED by this
+    # step's restores/adoptions (receipt.remaining = stall debt in bytes)
+    issued: List[PrefetchTransfer] = dataclasses.field(default_factory=list)
+    consumed: List[ConsumeReceipt] = dataclasses.field(default_factory=list)
 
     @property
     def total_prefill_tokens(self) -> int:
@@ -196,6 +235,13 @@ class SchedStats:
     # admissions deferred by the free-page low-watermark (soft back-off
     # before the hard out_of_block_stalls signal)
     watermark_stalls: int = 0
+    # prefetch-plan coverage, averaged over steps that actually had
+    # plannable bytes: a step with zero demand (attention-free arch, empty
+    # decode set) is counted as VACUOUS and excluded from the average —
+    # reporting it as 1.0 would inflate coverage/overlap on idle steps
+    prefetch_steps: int = 0
+    prefetch_vacuous_steps: int = 0
+    prefetch_coverage_sum: float = 0.0
 
     def packing_efficiency(self, chunk_size: int) -> float:
         """Scheduled tokens / chunk budget — 1.0 means every step was full."""
@@ -216,6 +262,13 @@ class SchedStats:
             return float("nan")
         return self.prefix_hits / total
 
+    def prefetch_coverage(self) -> float:
+        """Mean prefetch coverage over non-vacuous steps (NaN when every
+        step had zero plannable bytes — idle steps never report 1.0)."""
+        if self.prefetch_steps == 0:
+            return float("nan")
+        return self.prefetch_coverage_sum / self.prefetch_steps
+
 
 class Scheduler:
     def __init__(self, cfg: SchedulerConfig, model_cfg: ModelConfig):
@@ -234,6 +287,11 @@ class Scheduler:
         )
         self.planner = PrefetchPlanner(model_cfg, cfg.prefetch_buffer_bytes,
                                        mem=self.mem)
+        # in-flight/landed transfer ledger: next-step swap-in restores and
+        # prefix re-adoptions are issued here one step ahead; the engine
+        # lands them as its staged copies dispatch, the sim advances them
+        # with each step's residual host-link bandwidth
+        self.prefetch_queue = PrefetchQueue()
         self.waiting: List[Request] = []
         self.active: Dict[int, Request] = {}  # slot -> request (prefill or decode)
         self.free_slots: List[int] = list(range(cfg.max_decode_batch))
@@ -280,15 +338,17 @@ class Scheduler:
         return self.stats.packing_efficiency(self.cfg.chunk_size)
 
     # -------------------------------------------------------------- policies
+    def _policy_key(self):
+        """Admission-order sort key for the configured policy."""
+        if self.cfg.policy == "sjf":
+            return lambda r: (r.total_prefill_len - r.prefill_pos, r.arrival_time, r.rid)
+        if self.cfg.policy == "priority":
+            return lambda r: (-r.priority, r.arrival_time, r.rid)
+        return lambda r: (r.arrival_time, r.rid)  # fcfs
+
     def _pop_waiting(self) -> Request:
         """Remove and return the next request per the admission policy."""
-        if self.cfg.policy == "sjf":
-            key = lambda r: (r.total_prefill_len - r.prefill_pos, r.arrival_time, r.rid)
-        elif self.cfg.policy == "priority":
-            key = lambda r: (-r.priority, r.arrival_time, r.rid)
-        else:  # fcfs
-            key = lambda r: (r.arrival_time, r.rid)
-        best = min(self.waiting, key=key)
+        best = min(self.waiting, key=self._policy_key())
         self.waiting.remove(best)
         return best
 
@@ -312,12 +372,15 @@ class Scheduler:
             return True
         return not self.active and not self.swapped
 
-    def _admit_prefix(self, req: Request) -> None:
+    def _admit_prefix(self, req: Request, plan: StepPlan) -> None:
         """Match a freshly admitted request's effective prompt against the
         radix prefix cache; a hit adopts the cached block run as the table
         prefix and fast-forwards ``prefill_pos`` past the shared tokens (the
         final token always stays uncached so the finishing chunk computes
-        the first output logits)."""
+        the first output logits).  An adopt intent issued for this rid on an
+        earlier step is consumed here (its BEOL warm-up either overlapped or
+        arrives late); a predicted hit that did not materialize is
+        cancelled."""
         if self.mem.prefix is None:
             return
         tokens = req.prefill_slice(0, req.total_prefill_len)
@@ -325,13 +388,19 @@ class Scheduler:
             req.rid, tokens, max_tokens=req.total_prefill_len - 1,
             step=self.stats.steps)
         req.cached_prefix_len = matched
+        q = self.prefetch_queue
         if matched:
+            if q.pending(req.rid, ADOPT) is not None:
+                plan.consumed.append(q.consume(
+                    req.rid, ADOPT, self.stats.steps,
+                    demand_bytes=matched * self.planner.kv_btl))
             req.prefill_pos = matched
             self.stats.prefix_hits += 1
             self.stats.prefix_hit_tokens += matched
             self.stats.prefix_fill_bytes_saved += prefix_fill_bytes_saved(
                 matched, self.mem.kv_bytes_per_token)
         else:
+            q.cancel(req.rid, ADOPT)
             self.stats.prefix_misses += 1
 
     def _release_slot(self, req: Request, plan: StepPlan) -> int:
@@ -406,6 +475,13 @@ class Scheduler:
             if not (fits or forced):
                 break
             self.swapped.pop(0)
+            # claim the restore's host->HBM bytes from the ledger BEFORE the
+            # attach mints pages: a transfer issued on an earlier step (and
+            # landed) makes the restore free; anything else is late/sync
+            # debt the consuming backend must pay before reading the pages
+            plan.consumed.append(self.prefetch_queue.consume(
+                req.rid, SWAP_IN, self.stats.steps,
+                demand_bytes=self.mem.swap_host_bytes(req.rid)))
             self.mem.swap_in(req.rid)
             self.mem.tiers.touch(req.rid, self.stats.steps)
             self.stats.swap_ins += 1
@@ -496,7 +572,7 @@ class Scheduler:
                     self.active[pre.slot] = pre
                     self.prefilling.append(pre)
                     self.mem.tiers.touch(pre.rid, self.stats.steps)
-                    self._admit_prefix(pre)
+                    self._admit_prefix(pre, plan)
                 scheduled.add(pre.rid)
                 take = min(budget, pre.total_prefill_len - pre.prefill_pos)
                 headroom = self.mem.grow_headroom(pre.rid)
@@ -539,6 +615,14 @@ class Scheduler:
                 finishing.append(seg.rid)
         prios = {r: self.requests[r].priority for r in ctx}
         plan.prefetch = self.planner.plan(ctx, finishing=finishing, priorities=prios)
+        # coverage accounting (vacuous-step bugfix): a plan with zero
+        # plannable bytes contributes nothing to the average instead of a
+        # fake 1.0 — idle/attention-free steps cannot inflate coverage
+        if plan.prefetch.total_tokens == 0:
+            self.stats.prefetch_vacuous_steps += 1
+        else:
+            self.stats.prefetch_steps += 1
+            self.stats.prefetch_coverage_sum += plan.prefetch.coverage
 
         # ragged-attention accounting: the paged path reads whole blocks up
         # to each row's own length; the dense gather reads every row padded
@@ -558,11 +642,66 @@ class Scheduler:
         pad = self.padded_len if self.padded_len is not None else max_row
         self.stats.attn_tokens_padded += rows * (bs * -(-pad // bs))
 
+        # one-step-ahead transfer intents: issued against the ledger while
+        # THIS step's compute runs, consumed by the next step's restores /
+        # adoptions (still pre-increment: issue_step == this plan's index)
+        if self.cfg.async_prefetch:
+            self._plan_ahead(plan)
+
         self.stats.steps += 1
         self.stats.scheduled_tokens += plan.total_tokens
         self.stats.decode_tokens += len(plan.decode_slots)
         self.stats.prefill_tokens += plan.total_prefill_tokens
         return plan
+
+    def _plan_ahead(self, plan: StepPlan) -> None:
+        """Emit next-step transfer intents from the plan just built (the
+        paper's prefetch half, made temporal): predict which parked requests
+        restore next step and which waiting prompts will hit the prefix
+        cache, and issue their transfers so the DMA overlaps this step's
+        compute.  Mispredictions are safe — an unconsumed intent is consumed
+        late (still partially overlapped) or cancelled, and an unpredicted
+        consumer simply pays the synchronous path."""
+        q = self.prefetch_queue
+        step = self.stats.steps  # this plan's index (pre-increment)
+        # (a) swap-in restores: the oldest parked requests that could take a
+        # slot next step — currently free slots plus decodes finishing now.
+        # Under capacity thrash no slot is ever free at plan time (the next
+        # preemption frees it mid-step, right before the restore), so the
+        # oldest parked request is ALWAYS a candidate: restores are strictly
+        # oldest-first, so its transfer is consumed eventually and a too-
+        # early issue just lands ahead of a later consumer (never wasted)
+        if self.swapped:
+            freeing = sum(
+                1 for rid in plan.decode_rids
+                if (self.requests[rid].finished
+                    or len(self.requests[rid].output) + 1
+                    >= self.requests[rid].max_new_tokens))
+            slots = max(1, len(self.free_slots) + freeing)
+            for req in self.swapped[:slots]:
+                t = q.issue(req.rid, SWAP_IN,
+                            self.mem.swap_host_bytes(req.rid), step)
+                if t is not None and t.issue_step == step:
+                    plan.issued.append(t)
+        # (b) prefix-cache re-adoptions: probe (read-only) the next
+        # admission candidates' prompts; a predicted hit's matched pages get
+        # their BEOL warm-up issued ahead of the admitting step. The matched
+        # blocks are device-resident pages already — no bytes cross a link —
+        # so the intent lands at issue in BOTH backends: it prices the
+        # prediction (overlapped vs cancelled), not a data movement
+        if self.mem.prefix is not None and self.waiting:
+            lanes = self.cfg.max_concurrent_prefills - len(self.prefilling)
+            if lanes > 0:
+                head = sorted(self.waiting, key=self._policy_key())[:lanes]
+                for req in head:
+                    tokens = req.prefill_slice(0, req.total_prefill_len)
+                    matched = self.mem.probe_prefix(
+                        tokens, max_tokens=req.total_prefill_len - 1)
+                    t = q.issue(req.rid, ADOPT,
+                                matched * self.planner.kv_btl, step)
+                    if t is not None and t.issue_step == step:
+                        plan.issued.append(t)
+                        q.land(t)
 
     def commit_prefetch(self, plan: StepPlan,
                         earned_fill_bytes: Optional[float] = None) -> None:

@@ -84,6 +84,11 @@ def main():
     ap.add_argument("--admission-watermark", type=int, default=0,
                     help="free-page low-watermark gating NEW admissions "
                          "(blocks); reduces shed/re-admit thrash")
+    ap.add_argument("--no-async-prefetch", action="store_true",
+                    help="disable one-step-ahead KV transfer staging: swap "
+                         "restores and prefix adoptions pay the synchronous "
+                         "host-link cost instead of overlapping compute "
+                         "(outputs are token-identical either way)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -104,7 +109,8 @@ def main():
         kv_capacity_tokens=args.kv_capacity, preemption=args.preemption,
         kv_block_size=args.kv_block, num_kv_blocks=pool,
         enable_prefix_cache=args.prefix_cache,
-        admission_watermark=args.admission_watermark),
+        admission_watermark=args.admission_watermark,
+        async_prefetch=not args.no_async_prefetch),
         max_len=args.max_len, attn_kernel=args.attn_kernel)
     rng = np.random.default_rng(0)
     if args.shared_prefix > 0:
@@ -121,7 +127,8 @@ def main():
                                max_new_tokens=args.max_new))
     eng.run(max_steps=5000)
     m = summarize(eng.scheduler.requests.values(), horizon=float(max(eng.steps_run, 1)),
-                  sched_stats=eng.scheduler.stats, chunk_size=args.chunk)
+                  sched_stats=eng.scheduler.stats, chunk_size=args.chunk,
+                  prefetch_stats=eng.scheduler.prefetch_queue.stats)
     # savings are *realized* only when the ragged paged path actually ran;
     # otherwise the number is what it would have saved
     ragged = eng.packed_mode and eng.attn_kernel == "paged"
@@ -147,7 +154,11 @@ def main():
           f"{pool_rep}"
           f"{prefix_rep}"
           f"attn_savings={savings} "
-          f"prefetch_cov={np.mean(eng.prefetch_log):.2f}")
+          # coverage over steps with plannable bytes only (vacuous excluded)
+          f"prefetch_cov={m['prefetch_coverage']:.2f} "
+          f"overlapped={m['bytes_overlapped']:.0f}B "
+          f"overlap_eff={m['overlap_efficiency']:.2f} "
+          f"async={'off' if args.no_async_prefetch else 'on'}")
 
 
 if __name__ == "__main__":

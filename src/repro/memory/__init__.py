@@ -1,6 +1,8 @@
 """Tiered KV-cache memory subsystem: paged block allocator, radix prefix
-cache (copy-on-write prompt sharing), BEOL/HBM/host tier model, and the
-transfer engine that prices placement deltas as DMA."""
+cache (copy-on-write prompt sharing), BEOL/HBM/host tier model, the
+transfer engine that prices placement deltas as DMA, and the async
+prefetch ledger (issued/in-flight/landed state machine) that makes
+one-step-ahead KV movement safe to overlap with compute."""
 from repro.memory.block_allocator import (
     BlockAllocator,
     BlockTable,
@@ -10,6 +12,12 @@ from repro.memory.block_allocator import (
     prefix_fill_bytes_saved,
 )
 from repro.memory.manager import KVMemoryManager, SwapRecord, hbm_kv_pool_blocks
+from repro.memory.prefetch_queue import (
+    ConsumeReceipt,
+    PrefetchQueue,
+    PrefetchQueueStats,
+    PrefetchTransfer,
+)
 from repro.memory.prefix_cache import PrefixCache, PrefixCacheStats
 from repro.memory.tiers import BEOL, HBM, HOST, Placement, TierManager
 from repro.memory.transfers import DMAPlan, DMAReport, Transfer, TransferEngine
@@ -20,6 +28,7 @@ __all__ = [
     "HOST",
     "BlockAllocator",
     "BlockTable",
+    "ConsumeReceipt",
     "DMAPlan",
     "DMAReport",
     "DetachRecord",
@@ -27,6 +36,9 @@ __all__ = [
     "KVMemoryManager",
     "OutOfBlocks",
     "Placement",
+    "PrefetchQueue",
+    "PrefetchQueueStats",
+    "PrefetchTransfer",
     "PrefixCache",
     "PrefixCacheStats",
     "SwapRecord",

@@ -299,6 +299,17 @@ class KVMemoryManager:
         self.allocator.adopt(rid, blocks, matched)
         return matched
 
+    def probe_prefix(self, tokens: Sequence[int],
+                     max_tokens: Optional[int] = None) -> int:
+        """Read-only ``match_prefix``: tokens a future admission WOULD adopt
+        right now.  No LRU touch, no adoption — the one-step-ahead prefetch
+        planner prices re-adoption intents with this."""
+        if self.prefix is None:
+            return 0
+        limit = len(tokens) - 1 if max_tokens is None else max_tokens
+        bs = self.block_size
+        return self.prefix.probe(tokens, max_blocks=max(0, limit) // bs) * bs
+
     def insert_prefix(self, rid: int, tokens: Sequence[int], step: int = 0,
                       priority: int = 0) -> int:
         """Index rid's completed full prompt blocks (KV already written);

@@ -1,0 +1,257 @@
+"""Asynchronous prefetch ledger: the in-flight/landed state machine on KV
+transfers ("Asynchronous KV Cache Prefetching", PAPERS.md).
+
+The packing-prefetch co-design only pays off if next-step KV movement
+genuinely overlaps this step's compute.  This module is the discipline that
+makes that overlap *safe*: every transfer the scheduler plans one step ahead
+— a swapped-out request's host->HBM restore, a prefix-cache re-adoption's
+BEOL warm-up, a BEOL fill — is tracked through an explicit lifecycle::
+
+    free -> issued -> in-flight -> landed -> (consumed == readable)
+                        |
+                        +-> cancelled (intent never materialized)
+
+Invariants the rest of the stack relies on:
+
+  * a transfer that has not LANDED is never readable — a consuming step
+    that needs its pages must *stall* for the remaining bytes (surfaced as
+    explicit ``prefetch_stall`` time in the simulator, a synchronous copy in
+    the engine), never read stale data;
+  * issuing is idempotent per ``(rid, kind)``: one outstanding transfer at a
+    time, so a mispredicted intent is consumed late (still overlapped) or
+    cancelled, never duplicated;
+  * consumption is schedule-determined: the same Scheduler drives the real
+    engine and the analytical simulator, so ledger byte counters
+    (``bytes_overlapped``, ``bytes_sync``) agree between them for identical
+    workloads — only *time* (``stall_s``) is simulator-specific.
+
+The queue itself has no clock.  The simulator advances in-flight transfers
+with ``progress(budget_bytes)`` (residual host-link bandwidth earned during
+each step's wall time); the engine calls ``land()`` when its staged copy has
+actually been dispatched to the device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+# transfer kinds
+SWAP_IN = "swap_in"  # host DRAM -> HBM restore of a swapped request
+ADOPT = "adopt"  # prefix-cache re-adoption: BEOL warm-up of matched pages
+FILL = "fill"  # HBM -> BEOL prefetch fill (aggregate, rid = -1)
+KINDS = (SWAP_IN, ADOPT, FILL)
+
+# lifecycle states
+ISSUED = "issued"  # intent recorded, no bytes moved yet
+IN_FLIGHT = "in_flight"  # some bytes moved, not all
+LANDED = "landed"  # every byte on the destination tier: readable
+CONSUMED = "consumed"  # a step read the pages (terminal)
+CANCELLED = "cancelled"  # intent never materialized (terminal)
+
+
+@dataclasses.dataclass
+class PrefetchTransfer:
+    """One planned movement of KV bytes, issued ahead of its consumer."""
+
+    tid: int
+    rid: int  # request the pages belong to (-1 for aggregate fills)
+    kind: str  # SWAP_IN | ADOPT | FILL
+    nbytes: float
+    issue_step: int  # scheduler step that emitted the intent
+    state: str = ISSUED
+    remaining: float = 0.0  # bytes not yet landed
+    consume_step: Optional[int] = None
+
+    def __post_init__(self):
+        self.remaining = float(self.nbytes)
+
+    @property
+    def landed(self) -> bool:
+        return self.state == LANDED
+
+    @property
+    def live(self) -> bool:
+        return self.state in (ISSUED, IN_FLIGHT, LANDED)
+
+
+@dataclasses.dataclass
+class ConsumeReceipt:
+    """What the consuming step found when it asked for its pages."""
+
+    rid: int
+    kind: str
+    nbytes: float  # total bytes the consumer needed
+    remaining: float  # bytes NOT landed at consume time (the stall debt)
+    issued_ahead: bool  # an intent existed from an earlier step
+
+    @property
+    def overlapped(self) -> float:
+        """Bytes that crossed the link before the consumer needed them."""
+        return self.nbytes - self.remaining if self.issued_ahead else 0.0
+
+
+@dataclasses.dataclass
+class PrefetchQueueStats:
+    """Ledger counters; schedule-determined except ``stall_s`` (sim time).
+
+    ``bytes_overlapped`` + ``bytes_late`` + ``bytes_sync`` partition every
+    byte a consuming step ever needed: moved ahead of time, issued ahead but
+    still in flight at consume, or never issued ahead at all.
+    """
+
+    issued: int = 0
+    consumed: int = 0
+    cancelled: int = 0
+    sync_fetches: int = 0  # consumes with no issued-ahead transfer
+    stall_events: int = 0  # consumes that found unlanded bytes
+    bytes_issued: float = 0.0
+    bytes_overlapped: float = 0.0  # landed before the consuming step
+    bytes_late: float = 0.0  # issued ahead but unlanded at consume
+    bytes_sync: float = 0.0  # never issued ahead: fully synchronous
+    bytes_cancelled: float = 0.0  # intents that never found a consumer
+    stall_s: float = 0.0  # simulator-accumulated stall time
+
+    def overlap_efficiency(self) -> float:
+        """Fraction of needed transfer bytes hidden under earlier compute.
+        NaN when no transfers were ever consumed — an idle step contributes
+        nothing, so idle-heavy runs are not inflated toward 1.0."""
+        total = self.bytes_overlapped + self.bytes_late + self.bytes_sync
+        if total <= 0:
+            return float("nan")
+        return self.bytes_overlapped / total
+
+
+class PrefetchQueue:
+    """Transfer ledger shared by the Scheduler, the engine, and the sim."""
+
+    def __init__(self):
+        self._next_tid = 0
+        self.transfers: List[PrefetchTransfer] = []  # issue order
+        self._live: Dict[Tuple[int, str], PrefetchTransfer] = {}
+        self.stats = PrefetchQueueStats()
+
+    # ------------------------------------------------------------------ issue
+    def pending(self, rid: int, kind: str) -> Optional[PrefetchTransfer]:
+        """The outstanding (non-terminal) transfer for (rid, kind), if any."""
+        return self._live.get((rid, kind))
+
+    def issue(self, rid: int, kind: str, nbytes: float,
+              step: int) -> Optional[PrefetchTransfer]:
+        """Record an intent: ``nbytes`` must land before a later step may
+        read rid's pages.  Idempotent per (rid, kind) — an intent already in
+        flight is returned unchanged; zero-byte intents are not tracked."""
+        if kind not in KINDS:
+            raise ValueError(f"unknown transfer kind {kind!r}; want {KINDS}")
+        if nbytes <= 0:
+            return None
+        existing = self._live.get((rid, kind))
+        if existing is not None:
+            return existing
+        t = PrefetchTransfer(self._next_tid, rid, kind, float(nbytes), step)
+        self._next_tid += 1
+        self.transfers.append(t)
+        self._live[(rid, kind)] = t
+        self.stats.issued += 1
+        self.stats.bytes_issued += t.nbytes
+        return t
+
+    # --------------------------------------------------------------- movement
+    def progress(self, budget_bytes: float) -> float:
+        """Advance in-flight transfers oldest-first with ``budget_bytes`` of
+        link capacity (the simulator's residual bandwidth earned during one
+        step's wall time).  Returns the bytes actually moved.  Transfers
+        whose remaining bytes reach zero become LANDED (readable)."""
+        moved = 0.0
+        budget = float(budget_bytes)
+        for t in self.transfers:
+            if budget <= 0:
+                break
+            if t.state not in (ISSUED, IN_FLIGHT):
+                continue
+            take = min(budget, t.remaining)
+            t.remaining -= take
+            budget -= take
+            moved += take
+            t.state = LANDED if t.remaining <= 0 else IN_FLIGHT
+        return moved
+
+    def land(self, t: PrefetchTransfer) -> None:
+        """Force-land a transfer: the engine calls this once its staged
+        host->device copy has been dispatched (the device buffer carries the
+        bytes, ordered before any compute that reads them)."""
+        t.remaining = 0.0
+        t.state = LANDED
+
+    # ---------------------------------------------------------------- reading
+    def readable(self, rid: int, kind: str = SWAP_IN) -> bool:
+        """May a step read rid's pages for this transfer kind?  True iff no
+        outstanding transfer exists or it has fully LANDED.  An ISSUED or
+        IN_FLIGHT transfer is never readable — the consumer must stall."""
+        t = self._live.get((rid, kind))
+        return t is None or t.state == LANDED
+
+    def consume(self, rid: int, kind: str, step: int,
+                demand_bytes: float = 0.0) -> ConsumeReceipt:
+        """The consuming step claims rid's pages.  Retires the outstanding
+        transfer (if any) and returns a receipt splitting the demand into
+        overlapped (landed ahead of time) vs remaining (stall debt) bytes.
+        With no issued-ahead transfer the whole ``demand_bytes`` is a
+        synchronous fetch."""
+        t = self._live.pop((rid, kind), None)
+        if t is None or t.issue_step >= step:
+            # never issued ahead (or issued within the consuming step):
+            # nothing overlapped — the full demand moves synchronously
+            nbytes = float(demand_bytes)
+            if t is not None:
+                t.state = CONSUMED
+                t.consume_step = step
+                if nbytes <= 0:
+                    nbytes = t.nbytes
+            rec = ConsumeReceipt(rid, kind, nbytes, nbytes, issued_ahead=False)
+            if nbytes > 0:
+                self.stats.sync_fetches += 1
+                self.stats.bytes_sync += nbytes
+                self.stats.stall_events += 1
+            self.stats.consumed += 1
+            return rec
+        t.state = CONSUMED
+        t.consume_step = step
+        # the consumer's actual demand wins over the predicted intent size
+        # (e.g. an adopt intent probed 4 blocks but 2 were evicted meanwhile)
+        needed = float(demand_bytes) if demand_bytes > 0 else t.nbytes
+        landed = t.nbytes - t.remaining
+        late = max(0.0, needed - min(needed, landed))
+        rec = ConsumeReceipt(rid, kind, needed, late, issued_ahead=True)
+        self.stats.consumed += 1
+        self.stats.bytes_overlapped += rec.overlapped
+        self.stats.bytes_late += late
+        if late > 0:
+            self.stats.stall_events += 1
+        return rec
+
+    def cancel(self, rid: int, kind: str) -> float:
+        """Retire an intent whose consumer will never come (e.g. the request
+        finished while parked).  Returns the cancelled bytes."""
+        t = self._live.pop((rid, kind), None)
+        if t is None:
+            return 0.0
+        t.state = CANCELLED
+        self.stats.cancelled += 1
+        self.stats.bytes_cancelled += t.nbytes
+        return t.nbytes
+
+    # ------------------------------------------------------------- accounting
+    def note_fill(self, earned_bytes: float, shortfall_bytes: float) -> None:
+        """Fold a step's BEOL fill earn into the overlap ledger.  Fills are
+        issued and consumed at step granularity by the simulator's transfer
+        engine (earned out of residual bandwidth); a shortfall is a coverage
+        downgrade — the attention op falls back to HBM reads — never a
+        stall, so it is recorded as cancelled bytes, not late bytes."""
+        if earned_bytes > 0:
+            self.stats.bytes_overlapped += float(earned_bytes)
+        if shortfall_bytes > 0:
+            self.stats.bytes_cancelled += float(shortfall_bytes)
+
+    def in_flight_bytes(self) -> float:
+        return sum(t.remaining for t in self._live.values()
+                   if t.state in (ISSUED, IN_FLIGHT))

@@ -101,6 +101,27 @@ class PrefixCache:
         self.stats.matched_blocks += len(blocks)
         return blocks
 
+    def probe(self, tokens: Sequence[int],
+              max_blocks: Optional[int] = None) -> int:
+        """Read-only ``match``: how many full blocks of ``tokens`` the trie
+        currently covers, WITHOUT touching LRU timestamps or stats.  The
+        prefetch planner uses this to issue adopt intents one step ahead of
+        the admitting step — a probe must not mark nodes hot, or predicted
+        (possibly never-admitted) prompts would skew eviction."""
+        bs = self.alloc.block_size
+        node = self.root
+        depth = len(tokens) // bs
+        if max_blocks is not None:
+            depth = min(depth, max_blocks)
+        matched = 0
+        for i in range(depth):
+            child = node.children.get(tuple(tokens[i * bs:(i + 1) * bs]))
+            if child is None:
+                break
+            matched += 1
+            node = child
+        return matched
+
     # ---------------------------------------------------------------- insert
     def insert(self, tokens: Sequence[int], blocks: Sequence[int],
                step: int = 0, priority: int = 0) -> int:

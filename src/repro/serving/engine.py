@@ -25,6 +25,20 @@ swap-in lands host KV in whatever fresh pages the allocator mints.
 ``attn_kernel="dense"`` restores the seed's dense (slot, max_len) storage
 and rectangular gather.
 
+Asynchronous prefetch (``SchedulerConfig.async_prefetch``): the scheduler
+issues next-step transfer intents (swap-in restores, prefix re-adoptions)
+through the in-flight/landed ledger while this step runs. The engine
+realizes them by *staging*: each predicted restore's host KV is converted to
+device arrays right after this step's compute is dispatched — JAX dispatch
+is asynchronous, so the host->device copy overlaps the in-flight compute —
+and the ledger transfer is landed once the staged buffer exists. The
+consuming step's ``_apply_swaps`` then scatters from the staged device copy
+(device-to-device, no host link on the critical path); an unpredicted
+restore falls back to the synchronous host copy, and ``_verify_landed``
+asserts no step ever reads pages whose transfer has not landed. Invariant:
+staged and synchronous restores scatter byte-identical values, so greedy
+outputs are token-identical with async prefetch on or off.
+
 Either way the Scheduler (repro.core.scheduler) decides step composition and
 prefetch plans, so service-level behaviour (Figs 7/8) is policy-identical to
 the simulator. Correctness is proven by tests/test_engine.py: packed
@@ -41,6 +55,7 @@ import numpy as np
 
 from repro.core.packed_step import PagedView, packed_step, supports_packed
 from repro.core.scheduler import Scheduler, SchedulerConfig, StepPlan
+from repro.memory.prefetch_queue import ADOPT, SWAP_IN
 from repro.models.model import Model
 from repro.serving.request import Request, State
 
@@ -129,6 +144,11 @@ class Engine:
         # in paged mode, slot rows in dense mode), keyed by rid — the "host
         # tier" of the memory subsystem
         self.swap_store: Dict[int, dict] = {}
+        # async prefetch: device-resident staged copies of predicted
+        # swap-in restores, keyed by rid. Created by _issue_prefetch while
+        # the issuing step's compute is still in flight; consumed (popped)
+        # by _apply_swaps at the restoring step.
+        self._staged: Dict[int, dict] = {}
 
         # ragged paged attention is the packed default; it needs the page
         # size (= allocator block size) to tile max_len exactly
@@ -276,10 +296,15 @@ class Engine:
         if plan.prefetch is not None:
             self.prefetch_log.append(plan.prefetch.coverage)
         self._apply_swaps(plan)
+        self._verify_landed(plan)
         if self.packed_mode:
             self._run_packed(plan)
         else:
             self._run_two_call(plan)
+        # stage next step's predicted transfers NOW: the compute above is
+        # dispatched but (on an async backend) still in flight, so these
+        # host->device copies ride under it
+        self._issue_prefetch(plan)
         self.scheduler.complete_step(plan, now)
         self.steps_run += 1
         return plan
@@ -338,6 +363,7 @@ class Engine:
                 })}
             for rid, _slot in plan.swapped_in:
                 entry = self.swap_store.pop(rid)
+                staged = self._staged.pop(rid, None)
                 saved, idx = entry["kv"], entry["idx"]
                 if not idx:
                     continue  # every page stayed resident; table reuses them
@@ -356,7 +382,14 @@ class Engine:
                 m = _page_bucket(n)
                 ids = np.full((m,), scratch, np.int32)
                 ids[:n] = [blocks[i] for i in idx]
-                if m != n:
+                if staged is not None:
+                    # async prefetch landed this restore: the host copy is
+                    # already on device (bucket-padded at stage time), so
+                    # the scatter is device-to-device — no host link on the
+                    # critical path. Values are byte-identical to the
+                    # synchronous branch below.
+                    saved = staged
+                elif m != n:
                     saved = {
                         k: jax.tree.map(
                             lambda h, a=_batch_axis(k): np.concatenate(
@@ -376,7 +409,72 @@ class Engine:
             )
         for rid, slot in plan.swapped_in:
             saved = self.swap_store.pop(rid)
+            staged = self._staged.pop(rid, None)
+            if staged is not None:
+                saved = staged  # pre-staged on device by _issue_prefetch
             self.cache = self._scatter_slot(self.cache, saved, jnp.int32(slot))
+
+    # ------------------------------------------------------------- prefetch
+    def _issue_prefetch(self, plan: StepPlan) -> None:
+        """Realize the ledger transfers this plan issued for the NEXT step.
+
+        SWAP_IN: the predicted restore's host pages are put on device as a
+        staged copy (padded to the same pow2 page bucket ``_apply_swaps``
+        scatters with, so the compiled scatter is reused verbatim). ADOPT:
+        the matched radix blocks are already device-resident pages — no
+        bytes cross a link, the intent lands immediately. Either way the
+        transfer is LANDED before any later step may consume it, so the
+        readable() invariant holds by construction on the engine."""
+        q = self.scheduler.prefetch_queue
+        for t in plan.issued:
+            if t.kind == SWAP_IN:
+                entry = self.swap_store.get(t.rid)
+                if entry is None:
+                    continue  # intent outlived the store (defensive)
+                if t.rid not in self._staged:
+                    if self.attn_kernel == "paged":
+                        saved, idx = entry["kv"], entry["idx"]
+                        if saved is None:
+                            q.land(t)
+                            continue  # fully shared table: nothing to move
+                        n = len(idx)
+                        m = _page_bucket(n)
+                        if m != n:
+                            saved = {
+                                k: jax.tree.map(
+                                    lambda h, a=_batch_axis(k): np.concatenate(
+                                        [h, np.zeros(
+                                            h.shape[:a] + (m - n,)
+                                            + h.shape[a + 1:], h.dtype)],
+                                        axis=a),
+                                    saved[k],
+                                )
+                                for k in saved
+                            }
+                        self._staged[t.rid] = jax.tree.map(jnp.asarray, saved)
+                    else:
+                        self._staged[t.rid] = jax.tree.map(jnp.asarray, entry)
+                q.land(t)
+            elif t.kind == ADOPT:
+                q.land(t)
+
+    def _verify_landed(self, plan: StepPlan) -> None:
+        """Guard before attention reads the mirror: no request this step
+        touches may have an outstanding (issued / in-flight, not landed)
+        transfer. The scheduler consumes transfers at restore/adoption time,
+        and _issue_prefetch lands everything it stages, so this never fires
+        in a correct engine — it exists to turn a broken overlap schedule
+        into a loud error instead of silently stale KV."""
+        q = self.scheduler.prefetch_queue
+        rids = set(plan.decode_rids)
+        rids.update(s.rid for s in plan.prefill_segments)
+        for rid in sorted(rids):
+            for kind in (SWAP_IN, ADOPT):
+                if not q.readable(rid, kind):
+                    raise RuntimeError(
+                        f"async prefetch invariant violated: request {rid} "
+                        f"is scheduled this step but its {kind} transfer "
+                        "has not landed")
 
     def _sample_rows(self, logits_rows: np.ndarray) -> np.ndarray:
         """(rows, vocab) -> (rows,) token ids. The engine's single sampling

@@ -16,12 +16,18 @@ def percentile(xs: List[float], p: float) -> float:
 
 def summarize(requests: Iterable[Request], horizon: float,
               sched_stats=None, chunk_size: Optional[int] = None,
-              mem_stats: Optional[Dict[str, float]] = None) -> Dict[str, float]:
+              mem_stats: Optional[Dict[str, float]] = None,
+              prefetch_stats=None) -> Dict[str, float]:
     """Aggregate request-level latency metrics; when the scheduler's
     ``SchedStats`` (and its chunk size) are passed, also surface scheduler
     health: preemption counts, recompute debt, swap traffic, and packing
     efficiency. ``mem_stats`` merges memory-subsystem counters (tier
-    hit-rate, swapped bytes, HBM bytes moved/saved) from the service sim."""
+    hit-rate, swapped bytes, HBM bytes moved/saved) from the service sim.
+    ``prefetch_stats`` (a ``PrefetchQueueStats``) surfaces the async-
+    prefetch ledger: overlapped/late/sync byte split, stall accounting, and
+    overlap efficiency — byte counters are schedule-determined, so the
+    engine and the simulator report identical values for identical
+    workloads; only ``prefetch_stall_ms`` is simulator time."""
     reqs = [r for r in requests]
     done = [r for r in reqs if r.finish_time is not None]
     ttft = [r.first_token_time - r.arrival_time for r in done if r.first_token_time is not None]
@@ -74,8 +80,21 @@ def summarize(requests: Iterable[Request], horizon: float,
         m["prefix_tokens_skipped"] = float(sched_stats.prefix_hit_tokens)
         m["prefix_inserted_blocks"] = float(sched_stats.prefix_inserted_blocks)
         m["prefix_fill_bytes_saved"] = float(sched_stats.prefix_fill_bytes_saved)
+        # prefetch-plan coverage averaged over steps with plannable bytes
+        # only — vacuous steps (zero demand) are excluded, not scored 1.0
+        m["prefetch_coverage"] = sched_stats.prefetch_coverage()
+        m["prefetch_vacuous_steps"] = float(sched_stats.prefetch_vacuous_steps)
         if chunk_size is not None:
             m["packing_efficiency"] = sched_stats.packing_efficiency(chunk_size)
+    if prefetch_stats is not None:
+        m["bytes_overlapped"] = float(prefetch_stats.bytes_overlapped)
+        m["prefetch_late_bytes"] = float(prefetch_stats.bytes_late)
+        m["prefetch_sync_bytes"] = float(prefetch_stats.bytes_sync)
+        m["prefetch_cancelled_bytes"] = float(prefetch_stats.bytes_cancelled)
+        m["prefetch_issued"] = float(prefetch_stats.issued)
+        m["prefetch_stall_events"] = float(prefetch_stats.stall_events)
+        m["prefetch_stall_ms"] = prefetch_stats.stall_s * 1e3
+        m["overlap_efficiency"] = prefetch_stats.overlap_efficiency()
     if mem_stats:
         m.update({k: float(v) for k, v in mem_stats.items()})
     return m

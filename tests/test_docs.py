@@ -1,0 +1,63 @@
+"""Docs link hygiene: tools/check_docs.py passes on the repo and actually
+fails on broken references (a checker that cannot fail checks nothing)."""
+from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+CHECKER = REPO / "tools" / "check_docs.py"
+
+
+def run_checker(*args):
+    return subprocess.run([sys.executable, str(CHECKER), *args],
+                          capture_output=True, text=True)
+
+
+def test_repo_docs_are_clean():
+    r = run_checker()
+    assert r.returncode == 0, f"docs have broken references:\n{r.stderr}"
+    assert "0 broken references" in r.stdout
+
+
+def test_docs_exist():
+    for name in ("architecture.md", "memory.md", "benchmarks.md"):
+        assert (REPO / "docs" / name).exists(), f"docs/{name} missing"
+
+
+def test_checker_fails_on_broken_link(tmp_path):
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    bad = docs / "bad.md"
+    bad.write_text(
+        "# Bad\n\nSee [missing](does_not_exist.md) and `no/such_module.py`.\n")
+    r = run_checker("--root", str(tmp_path), str(bad))
+    assert r.returncode == 1
+    assert "broken link" in r.stderr
+    assert "missing source path" in r.stderr
+
+
+def test_checker_fails_on_broken_anchor(tmp_path):
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (docs / "target.md").write_text("# Real Heading\n")
+    bad = docs / "bad.md"
+    bad.write_text("[x](target.md#no-such-heading)\n")
+    r = run_checker("--root", str(tmp_path), str(bad))
+    assert r.returncode == 1
+    assert "broken anchor" in r.stderr
+
+
+def test_checker_accepts_valid_refs(tmp_path):
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (docs / "target.md").write_text("# Real Heading\n")
+    (tmp_path / "mod.py").write_text("x = 1\n")
+    good = docs / "good.md"
+    good.write_text(
+        "[ok](target.md#real-heading) and `mod.py`; external "
+        "[badge](https://example.com/x.md) and escaping "
+        "[web](../../actions/workflows/ci.yml) are skipped.\n")
+    r = run_checker("--root", str(tmp_path), str(good))
+    assert r.returncode == 0, r.stderr

@@ -1,0 +1,233 @@
+"""Async-prefetch safety and accounting.
+
+The overlap tentpole's two invariants:
+
+1. a transfer that has not LANDED is never readable — a consuming step
+   surfaces the remaining bytes as explicit stall debt, it never reads
+   stale data (property-tested on the ledger; the engine's
+   ``_verify_landed`` turns a violation into a loud error);
+2. ledger byte counters are schedule-determined — the engine and the
+   service simulator report identical ``bytes_overlapped`` / sync splits
+   for identical scheduler knobs, and greedy outputs are token-identical
+   with async prefetch on or off.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.configs.reduced import dropless
+from repro.core.scheduler import Scheduler, SchedulerConfig, StepPlan
+from repro.memory.prefetch_queue import SWAP_IN, PrefetchQueue
+from repro.models import build_model
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+
+from _compat import given, settings, st
+
+MAX_LEN = 64
+
+
+# ---------------------------------------------------------------------------
+# ledger state machine (pure, no jax)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    nbytes=st.integers(min_value=1, max_value=1 << 20),
+    n_chunks=st.integers(min_value=1, max_value=7),
+    data=st.data(),
+)
+def test_issued_not_landed_never_readable(nbytes, n_chunks, data):
+    """Drip-feed bandwidth: readable() must stay False until every byte
+    landed, and consuming early must surface the shortfall as debt."""
+    q = PrefetchQueue()
+    t = q.issue(rid=1, kind=SWAP_IN, nbytes=nbytes, step=0)
+    assert t is not None and not q.readable(1, SWAP_IN)
+    landed = 0
+    for _ in range(n_chunks):
+        budget = data.draw(st.integers(min_value=0, max_value=nbytes))
+        q.progress(budget)
+        landed = min(nbytes, landed + budget)
+        assert q.readable(1, SWAP_IN) == (landed == nbytes)
+        assert t.remaining == nbytes - landed
+    # consume at a later step: landed bytes overlapped, shortfall is debt
+    r = q.consume(1, SWAP_IN, step=1)
+    assert r.issued_ahead
+    assert r.remaining == nbytes - landed
+    assert r.overlapped == landed
+    assert q.stats.bytes_overlapped == landed
+    assert q.stats.bytes_late == nbytes - landed
+    # the ledger never reports stale data as readable after consumption
+    assert q.readable(1, SWAP_IN)  # no live transfer -> nothing to wait on
+
+
+def test_issue_idempotent_and_cancel():
+    q = PrefetchQueue()
+    t1 = q.issue(rid=7, kind=SWAP_IN, nbytes=100, step=0)
+    t2 = q.issue(rid=7, kind=SWAP_IN, nbytes=999, step=0)
+    assert t2 is t1, "one outstanding transfer per (rid, kind)"
+    assert q.issue(rid=7, kind=SWAP_IN, nbytes=0, step=0) is None
+    assert q.stats.bytes_issued == 100
+    q.cancel(7, SWAP_IN)
+    assert q.stats.cancelled == 1 and q.stats.bytes_cancelled == 100
+    assert q.readable(7, SWAP_IN)  # cancelled intent leaves nothing pending
+
+
+def test_sync_consume_is_not_overlap():
+    """A transfer consumed in its issue step was never ahead of compute:
+    all bytes are sync debt, none count as overlapped."""
+    q = PrefetchQueue()
+    q.issue(rid=3, kind=SWAP_IN, nbytes=64, step=5)
+    r = q.consume(3, SWAP_IN, step=5)
+    assert not r.issued_ahead and r.overlapped == 0
+    assert q.stats.bytes_sync == 64 and q.stats.bytes_overlapped == 0
+    assert q.stats.sync_fetches == 1
+
+
+def test_overlap_efficiency_bounds():
+    q = PrefetchQueue()
+    q.issue(rid=1, kind=SWAP_IN, nbytes=80, step=0)
+    q.progress(80)
+    q.consume(1, SWAP_IN, step=1)
+    q.issue(rid=2, kind=SWAP_IN, nbytes=20, step=1)
+    q.consume(2, SWAP_IN, step=2)  # nothing landed -> all late
+    eff = q.stats.overlap_efficiency()
+    assert 0.0 <= eff <= 1.0 and eff == pytest.approx(0.8)
+
+
+# ---------------------------------------------------------------------------
+# engine guard: un-landed transfer -> loud error, not stale KV
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_llama():
+    cfg = dropless(reduce_config(get_config("llama3.1-8b")))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _swap_reqs(cfg, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, L).tolist(),
+                    max_new_tokens=o)
+            for i, (L, o) in enumerate([(17, 6), (23, 5), (12, 7)])]
+
+
+SWAP_KNOBS = dict(chunk_size=16, max_decode_batch=3,
+                  prefetch_buffer_bytes=0, max_concurrent_prefills=2,
+                  kv_capacity_tokens=30, preemption="swap", kv_block_size=4)
+
+
+def _run_engine(model, params, cfg, reqs, async_on, **knobs):
+    eng = Engine(model, params,
+                 SchedulerConfig(async_prefetch=async_on, **knobs),
+                 max_len=MAX_LEN)
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                           max_new_tokens=r.max_new_tokens))
+    eng.run(max_steps=2000)
+    outs = {r.rid: list(eng.scheduler.requests[r.rid].output) for r in reqs}
+    return eng, outs
+
+
+def test_engine_verify_landed_raises(small_llama):
+    """A scheduled request with an issued-but-not-landed transfer must
+    abort the step — never read through the mirror."""
+    cfg, model, params = small_llama
+    eng = Engine(model, params, SchedulerConfig(chunk_size=16, kv_block_size=4),
+                 max_len=MAX_LEN)
+    eng.scheduler.prefetch_queue.issue(rid=5, kind=SWAP_IN, nbytes=128, step=0)
+    plan = StepPlan(decode_slots=[0], decode_rids=[5])
+    with pytest.raises(RuntimeError, match="has not landed"):
+        eng._verify_landed(plan)
+
+
+def test_engine_token_identity_async_on_off(small_llama):
+    """Swap-thrash workload: greedy outputs must not depend on whether
+    restores were staged ahead or paid synchronously."""
+    cfg, model, params = small_llama
+    reqs = _swap_reqs(cfg)
+    eng_on, outs_on = _run_engine(model, params, cfg, reqs, True, **SWAP_KNOBS)
+    _, outs_off = _run_engine(model, params, cfg, reqs, False, **SWAP_KNOBS)
+    assert outs_on == outs_off
+    assert eng_on.scheduler.stats.swap_ins > 0, "workload never swapped"
+    assert eng_on.scheduler.prefetch_queue.stats.bytes_overlapped > 0
+
+
+def test_engine_sim_ledger_agreement(small_llama):
+    """Identical knobs + requests -> identical schedules -> the ledger's
+    byte counters are EQUAL between engine and simulator; stall time is the
+    only simulator-specific quantity."""
+    from repro.sim.hardware import TPUV6E
+    from repro.sim.service import simulate_service
+
+    cfg, model, params = small_llama
+    reqs = _swap_reqs(cfg)
+    eng_on, _ = _run_engine(model, params, cfg, reqs, True, **SWAP_KNOBS)
+    qs = eng_on.scheduler.prefetch_queue.stats
+    sim = simulate_service(
+        TPUV6E, cfg, workload=None, qps=1.0, mode="packed", chunk=16,
+        max_decode_batch=3, max_concurrent_prefills=2,
+        kv_capacity_tokens=30, preemption="swap", kv_block_size=4,
+        async_prefetch=True,
+        requests=[Request(rid=r.rid, prompt=list(r.prompt),
+                          max_new_tokens=r.max_new_tokens) for r in reqs],
+    )
+    m = sim.metrics
+    assert m["bytes_overlapped"] == qs.bytes_overlapped
+    assert m["prefetch_sync_bytes"] == qs.bytes_sync
+    assert m["prefetch_late_bytes"] == qs.bytes_late
+    assert m["prefetch_issued"] == qs.issued
+    # stall accounting: time only accrues where the ledger recorded debt
+    if m["prefetch_late_bytes"] == 0 and m["prefetch_sync_bytes"] == 0:
+        assert m["prefetch_stall_ms"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# simulator: overlap pricing invariants (cheap, no jax compute)
+# ---------------------------------------------------------------------------
+
+def test_sim_async_bounds():
+    """Async pricing: never slower than sync, strictly faster when bytes
+    overlapped, identical schedule (steps / swap traffic) either way."""
+    from repro.sim.hardware import TPUV6E
+    from repro.sim.service import simulate_service
+
+    cfg = get_config("llama3.1-8b")
+
+    def run(async_on):
+        reqs = [Request(rid=i, prompt=[0] * 256, max_new_tokens=48,
+                        arrival_time=0.0) for i in range(8)]
+        return simulate_service(
+            TPUV6E, cfg, workload=None, qps=1.0, mode="packed", chunk=256,
+            max_decode_batch=16, kv_block_size=16, kv_capacity_tokens=1024,
+            preemption="swap", async_prefetch=async_on, requests=reqs)
+
+    r_on, r_off = run(True), run(False)
+    m_on, m_off = r_on.metrics, r_off.metrics
+    assert m_on["bytes_overlapped"] > 0
+    assert r_on.sim_time <= r_off.sim_time * (1 + 1e-9)
+    assert r_on.sim_time < m_on["serial_time_s"]
+    assert r_on.sim_time >= m_on["overlap_bound_s"] * (1 - 1e-9)
+    assert r_on.steps == r_off.steps
+    assert m_on["swapped_bytes"] == m_off["swapped_bytes"]
+    # async off issues nothing ahead: everything is sync debt
+    assert m_off["bytes_overlapped"] == 0
+
+
+def test_scheduler_vacuous_coverage_excluded():
+    """Zero-plannable-byte steps must not score 1.0 coverage: they are
+    excluded from the average and counted separately."""
+    sched = Scheduler(SchedulerConfig(chunk_size=8, prefetch_buffer_bytes=1 << 20),
+                      get_config("llama3.1-8b"))
+    sched.add_request(Request(rid=0, prompt=[1] * 20, max_new_tokens=2))
+    # non-finishing prefill chunk, no decodes: zero plannable KV -> vacuous
+    sched.next_step()
+    assert sched.stats.prefetch_vacuous_steps >= 1
+    assert sched.stats.prefetch_steps == 0
+    assert np.isnan(sched.stats.prefetch_coverage())

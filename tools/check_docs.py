@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Docs link hygiene: fail CI when documentation rots.
+
+Checks, for README.md and every ``docs/*.md``:
+
+1. every *relative* markdown link ``[text](target)`` points at an existing
+   file (links that resolve outside the repo root — e.g. the CI badge's
+   ``../../actions/...`` GitHub web path — and absolute ``http(s)://`` /
+   ``mailto:`` links are skipped);
+2. a ``#fragment`` on a markdown target names a real heading in the linked
+   file (GitHub-style slugs);
+3. every backticked ``*.py`` / ``*.md`` path (``src/repro/...``, a
+   repo-relative path, a ``src/repro``-relative shorthand like
+   ``sim/service.py``, or a bare basename like ``tiers.py``) exists in the
+   tree. A ``::test_name`` suffix is stripped first.
+
+Usage:
+
+    python tools/check_docs.py [--root DIR] [file.md ...]
+
+With no files, README.md + docs/*.md under the root are checked. Exits
+non-zero listing every broken reference.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+TICK_RE = re.compile(r"`([^`\n]+)`")
+PATH_RE = re.compile(r"^[A-Za-z0-9_./-]+\.(?:py|md)$")
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+SKIP_DIRS = {".git", ".venv", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def anchors_of(md: Path) -> set:
+    out = set()
+    for line in md.read_text().splitlines():
+        m = re.match(r"^#{1,6}\s+(.*)$", line)
+        if m:
+            out.add(slugify(m.group(1)))
+    return out
+
+
+def strip_code_blocks(text: str) -> str:
+    """Drop fenced code blocks — shell snippets are not doc references."""
+    return re.sub(r"^```.*?^```", "", text, flags=re.S | re.M)
+
+
+def iter_tree(root: Path):
+    for p in root.rglob("*"):
+        if any(part in SKIP_DIRS for part in p.parts):
+            continue
+        yield p
+
+
+def check_file(md: Path, root: Path, tree_names) -> list:
+    errors = []
+    text = md.read_text()
+    body = strip_code_blocks(text)
+
+    # 1+2: relative markdown links (scan full text — links sit in prose)
+    for target in LINK_RE.findall(body):
+        if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        path_part, _, frag = target.partition("#")
+        resolved = (md.parent / path_part).resolve()
+        try:
+            resolved.relative_to(root.resolve())
+        except ValueError:
+            continue  # escapes the repo (e.g. badge web paths) — not ours
+        if not resolved.exists():
+            errors.append(f"{md}: broken link -> {target}")
+            continue
+        if frag and resolved.suffix == ".md":
+            if slugify(frag) not in anchors_of(resolved):
+                errors.append(f"{md}: broken anchor -> {target}")
+
+    # 3: backticked source paths
+    for tick in TICK_RE.findall(body):
+        cand = tick.split("::", 1)[0].strip()
+        if not PATH_RE.match(cand) or cand.startswith("."):
+            continue
+        tries = [root / cand, root / "src" / cand, root / "src" / "repro" / cand]
+        if any(t.exists() for t in tries):
+            continue
+        if "/" not in cand and cand in tree_names:
+            continue
+        errors.append(f"{md}: missing source path -> `{tick}`")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", type=Path,
+                    help="markdown files (default: README.md + docs/*.md)")
+    ap.add_argument("--root", type=Path, default=Path(__file__).parent.parent,
+                    help="repo root for path resolution")
+    args = ap.parse_args(argv)
+    root = args.root.resolve()
+
+    files = args.files or sorted(
+        [p for p in [root / "README.md"] if p.exists()]
+        + list((root / "docs").glob("*.md")))
+    if not files:
+        print("check_docs: no markdown files found", file=sys.stderr)
+        return 2
+
+    tree_names = {p.name for p in iter_tree(root) if p.is_file()}
+    errors = []
+    for md in files:
+        errors.extend(check_file(md, root, tree_names))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_docs: {len(files)} files, {len(errors)} broken references")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
