@@ -56,7 +56,7 @@ def _sim_run(async_on: bool, smoke: bool):
     )
 
 
-def _engine_run(model, params, reqs, async_on: bool, **knobs):
+def _engine_run(model, params, reqs, async_on: bool, tracer=None, **knobs):
     from repro.core.scheduler import SchedulerConfig
     from repro.serving.engine import Engine
     from repro.serving.request import Request
@@ -65,6 +65,7 @@ def _engine_run(model, params, reqs, async_on: bool, **knobs):
         model, params,
         SchedulerConfig(async_prefetch=async_on, **knobs),
         max_len=64,
+        tracer=tracer,
     )
     for r in reqs:
         eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
@@ -116,7 +117,12 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(3)
 
-    # (a) over-subscribed swap workload (preemption="swap")
+    # (a) over-subscribed swap workload (preemption="swap") — the async-on
+    # engine run and the knob-identical sim run below both record traces,
+    # so tools/check_trace.py can verify the schedule-determined event
+    # sequences coincide (the ledger-equality guarantee, structurally)
+    from repro.obs.trace import TraceRecorder
+    eng_tr = TraceRecorder("engine") if json_path else None
     swap_knobs = dict(chunk_size=16, max_decode_batch=3,
                       prefetch_buffer_bytes=0, max_concurrent_prefills=2,
                       kv_capacity_tokens=30, preemption="swap",
@@ -125,7 +131,8 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
                     prompt=rng.integers(0, cfg.vocab_size, L).tolist(),
                     max_new_tokens=o)
             for i, (L, o) in enumerate([(17, 6), (23, 5), (12, 7)])]
-    eng_on, outs_on = _engine_run(model, params, reqs, True, **swap_knobs)
+    eng_on, outs_on = _engine_run(model, params, reqs, True, tracer=eng_tr,
+                                  **swap_knobs)
     eng_off, outs_off = _engine_run(model, params, reqs, False, **swap_knobs)
     assert outs_on == outs_off, "async prefetch changed greedy outputs (swap)"
     q_on = eng_on.scheduler.prefetch_queue.stats
@@ -137,6 +144,7 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
     # schedule-determined; only stall time is sim-specific)
     from repro.sim.hardware import TPUV6E
     from repro.sim.service import simulate_service
+    sim_tr = TraceRecorder("sim", manual_clock=True) if json_path else None
     sim_same = simulate_service(
         TPUV6E, cfg, workload=None, qps=1.0, mode="packed", chunk=16,
         max_decode_batch=3, max_concurrent_prefills=2,
@@ -144,6 +152,7 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
         async_prefetch=True,
         requests=[Request(rid=r.rid, prompt=list(r.prompt),
                           max_new_tokens=r.max_new_tokens) for r in reqs],
+        tracer=sim_tr,
     )
     assert sim_same.metrics["bytes_overlapped"] == q_on.bytes_overlapped, (
         f"sim overlapped {sim_same.metrics['bytes_overlapped']}, "
@@ -167,6 +176,7 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
              f"overlap_eff={q_on.overlap_efficiency():.3f},token_identical=True")
 
     if json_path:
+        from repro.obs.perfetto import export_chrome, json_safe
         data = {}
         if os.path.exists(json_path):
             with open(json_path) as f:
@@ -185,8 +195,16 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
             "token_identical": True,
         }
         with open(json_path, "w") as f:
-            json.dump(data, f, indent=2)
+            json.dump(json_safe(data), f, indent=2)
         print_fn(f"# merged overlap section into {json_path}")
+        # Perfetto traces of the compare pair (engine run (a) async-on and
+        # the knob-identical sim): CI feeds these to tools/check_trace.py
+        out_dir = os.path.dirname(os.path.abspath(json_path))
+        eng_trace = os.path.join(out_dir, "overlap_trace_engine.json")
+        sim_trace = os.path.join(out_dir, "overlap_trace_sim.json")
+        export_chrome(eng_tr, eng_trace)
+        export_chrome(sim_tr, sim_trace)
+        print_fn(f"# traces written: {eng_trace} {sim_trace}")
     return True
 
 

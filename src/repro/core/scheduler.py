@@ -64,6 +64,7 @@ from repro.memory.prefetch_queue import (
     PrefetchQueue,
     PrefetchTransfer,
 )
+from repro.obs.trace import NOOP
 from repro.serving.request import Request, State
 from repro.sim.opcost import kv_tokens_touched
 
@@ -269,11 +270,81 @@ class SchedStats:
             return float("nan")
         return self.prefetch_coverage_sum / self.prefetch_steps
 
+    def register_metrics(self, reg, chunk_size: Optional[int] = None) -> None:
+        """Declare the scheduler's counters in a typed metrics registry —
+        the names ARE the historical ``metrics.summarize`` keys."""
+        reg.counter("preemptions", "events",
+                    "decode/prefill victims shed by KV pressure").inc(
+                        float(self.preemptions))
+        reg.counter("preempted_tokens", "tokens",
+                    "KV tokens dropped to recompute debt").inc(
+                        float(self.preempted_tokens))
+        reg.counter("prefill_tokens", "tokens",
+                    "prompt tokens actually prefilled").inc(
+                        float(self.prefill_tokens))
+        reg.counter("steps", "steps", "packed steps executed").inc(
+            float(self.steps))
+        reg.counter("swap_outs", "events", "block tables spilled to host").inc(
+            float(self.swap_outs))
+        reg.counter("swap_ins", "events", "block tables restored from host").inc(
+            float(self.swap_ins))
+        reg.counter("swapped_out_tokens", "tokens",
+                    "KV tokens spilled to host (no recompute debt)").inc(
+                        float(self.swapped_out_tokens))
+        reg.counter("attn_tokens_touched", "tokens",
+                    "KV key tokens the block-granular paged path reads").inc(
+                        float(self.attn_tokens_touched))
+        reg.counter("attn_tokens_padded", "tokens",
+                    "KV key tokens a padded dense gather would read").inc(
+                        float(self.attn_tokens_padded))
+        reg.gauge("attn_padding_savings", "ratio",
+                  "fraction of padded attention reads the ragged path "
+                  "avoids").set(self.attn_padding_savings())
+        reg.counter("out_of_block_stalls", "events",
+                    "admissions/chunks deferred by a full pool").inc(
+                        float(self.out_of_block_stalls))
+        reg.counter("watermark_stalls", "events",
+                    "admissions deferred by the free-page low-watermark").inc(
+                        float(self.watermark_stalls))
+        reg.counter("prefix_hits", "events",
+                    "admissions that adopted a cached prefix").inc(
+                        float(self.prefix_hits))
+        reg.counter("prefix_misses", "events",
+                    "admissions with no cached prefix match").inc(
+                        float(self.prefix_misses))
+        reg.gauge("prefix_hit_rate", "ratio",
+                  "fraction of admissions adopting a cached prefix").set(
+                      self.prefix_hit_rate())
+        reg.counter("prefix_tokens_skipped", "tokens",
+                    "prefill tokens skipped via prefix adoption").inc(
+                        float(self.prefix_hit_tokens))
+        reg.counter("prefix_inserted_blocks", "blocks",
+                    "finished-prompt blocks indexed in the radix cache").inc(
+                        float(self.prefix_inserted_blocks))
+        reg.counter("prefix_fill_bytes_saved", "bytes",
+                    "HBM fill bytes prefix adoption never streamed").inc(
+                        float(self.prefix_fill_bytes_saved))
+        reg.gauge("prefetch_coverage", "ratio",
+                  "mean prefetch coverage over non-vacuous steps").set(
+                      self.prefetch_coverage())
+        reg.counter("prefetch_vacuous_steps", "steps",
+                    "steps with zero plannable prefetch bytes").inc(
+                        float(self.prefetch_vacuous_steps))
+        if chunk_size is not None:
+            reg.gauge("packing_efficiency", "ratio",
+                      "scheduled tokens / chunk budget (1.0 = every step "
+                      "full)").set(self.packing_efficiency(chunk_size))
+
 
 class Scheduler:
-    def __init__(self, cfg: SchedulerConfig, model_cfg: ModelConfig):
+    def __init__(self, cfg: SchedulerConfig, model_cfg: ModelConfig,
+                 tracer=None):
         self.cfg = cfg
         self.model_cfg = model_cfg
+        # step-level tracing: the NOOP singleton when disabled — every hook
+        # below is guarded by ``trace.enabled`` so a disabled run does no
+        # per-event work (repro.obs.trace)
+        self.trace = tracer if tracer is not None else NOOP
         # the memory subsystem is the single source of truth for KV occupancy
         self.mem = KVMemoryManager(
             model_cfg,
@@ -291,7 +362,7 @@ class Scheduler:
         # prefix re-adoptions are issued here one step ahead; the engine
         # lands them as its staged copies dispatch, the sim advances them
         # with each step's residual host-link bandwidth
-        self.prefetch_queue = PrefetchQueue()
+        self.prefetch_queue = PrefetchQueue(tracer=self.trace)
         self.waiting: List[Request] = []
         self.active: Dict[int, Request] = {}  # slot -> request (prefill or decode)
         self.free_slots: List[int] = list(range(cfg.max_decode_batch))
@@ -324,6 +395,13 @@ class Scheduler:
         self.requests[req.rid] = req
         req.state = State.QUEUED
         self.waiting.append(req)
+        if self.trace.enabled:
+            # sched_key=False: the engine submits up front, the sim admits
+            # arrivals on its clock — stream *positions* legitimately differ
+            self.trace.request_event(
+                req.rid, "arrival", ts=max(req.arrival_time, 0.0),
+                sched_key=False, prompt_len=req.prompt_len,
+                max_new_tokens=req.max_new_tokens, priority=req.priority)
 
     @property
     def has_work(self) -> bool:
@@ -399,6 +477,10 @@ class Scheduler:
             self.stats.prefix_hit_tokens += matched
             self.stats.prefix_fill_bytes_saved += prefix_fill_bytes_saved(
                 matched, self.mem.kv_bytes_per_token)
+            if self.trace.enabled:
+                self.trace.request_event(req.rid, "adopt",
+                                         step=self.stats.steps,
+                                         matched_tokens=matched)
         else:
             q.cancel(req.rid, ADOPT)
             self.stats.prefix_misses += 1
@@ -438,11 +520,17 @@ class Scheduler:
             req.state = State.SWAPPED
             plan.swapped_out.append((req.rid, slot))
             self.swapped.append(req)
+            if self.trace.enabled:
+                self.trace.request_event(req.rid, "swap_out",
+                                         step=self.stats.steps, tokens=tokens)
             return
         # recompute-style preemption: the generated output becomes part of
         # the effective prompt and is re-prefilled later.
         req.restart_output_len = len(req.output)
         self._requeue_recompute(req)
+        if self.trace.enabled:
+            self.trace.request_event(req.rid, "preempt",
+                                     step=self.stats.steps, mode="recompute")
 
     def _preempt_prefill(self, req: Request, plan: StepPlan) -> None:
         """Shed an in-flight *prefill* to free pool blocks (hard-bound
@@ -452,6 +540,9 @@ class Scheduler:
         self._release_slot(req, plan)
         self.prefilling.remove(req)
         self._requeue_recompute(req)
+        if self.trace.enabled:
+            self.trace.request_event(req.rid, "preempt",
+                                     step=self.stats.steps, mode="shed")
 
     def _restore_swapped(self, plan: StepPlan, now: float) -> None:
         """Re-admit swapped-out decodes (oldest first) when a slot is free
@@ -489,6 +580,9 @@ class Scheduler:
             req.state = State.DECODE
             self.active[req.slot] = req
             plan.swapped_in.append((req.rid, req.slot))
+            if self.trace.enabled:
+                self.trace.request_event(req.rid, "swap_in",
+                                         step=self.stats.steps, slot=req.slot)
 
     # ----------------------------------------------------------------- steps
     def next_step(self, now: float = 0.0) -> Optional[StepPlan]:
@@ -573,6 +667,11 @@ class Scheduler:
                     self.prefilling.append(pre)
                     self.mem.tiers.touch(pre.rid, self.stats.steps)
                     self._admit_prefix(pre, plan)
+                    if self.trace.enabled:
+                        self.trace.request_event(
+                            pre.rid, "admit", step=self.stats.steps,
+                            slot=pre.slot,
+                            cached_prefix=pre.cached_prefix_len)
                 scheduled.add(pre.rid)
                 take = min(budget, pre.total_prefill_len - pre.prefill_pos)
                 headroom = self.mem.grow_headroom(pre.rid)
@@ -647,6 +746,25 @@ class Scheduler:
         # adoptions (still pre-increment: issue_step == this plan's index)
         if self.cfg.async_prefetch:
             self._plan_ahead(plan)
+
+        # canonical schedule-determined step record: the same Scheduler
+        # drives both backends, so for identical workloads the engine and
+        # the simulator emit identical key sequences — checked structurally
+        # by tools/check_trace.py --compare (timestamps are never in keys)
+        if self.trace.enabled:
+            self.trace.sched_step(
+                step=self.stats.steps,
+                decode=tuple(plan.decode_rids),
+                prefill=tuple((s.rid, s.start, s.length, int(s.finishes))
+                              for s in plan.prefill_segments),
+                preempted=tuple(plan.preempted_rids),
+                swap_out=tuple(plan.swapped_out),
+                swap_in=tuple(plan.swapped_in),
+                issued=tuple((t.rid, t.kind, int(round(t.nbytes)))
+                             for t in plan.issued),
+                consumed=tuple((r.rid, r.kind, int(round(r.nbytes)))
+                               for r in plan.consumed),
+            )
 
         self.stats.steps += 1
         self.stats.scheduled_tokens += plan.total_tokens
@@ -734,6 +852,14 @@ class Scheduler:
                 self.prefilling.remove(req)
                 if req.first_token_time is None:
                     req.first_token_time = now
+                    if self.trace.enabled:
+                        self.trace.request_event(req.rid, "first_token",
+                                                 step=self.stats.steps - 1)
+                elif self.trace.enabled:
+                    # re-prefill after a recompute preemption: not a TTFT
+                    # edge, but the lifecycle span still re-enters decode
+                    self.trace.request_event(req.rid, "prefill_done",
+                                             step=self.stats.steps - 1)
                 req.token_times.append(now)
                 # the prompt's KV is fully written: index its full blocks in
                 # the radix cache so later shared-prefix admissions fork them
@@ -758,6 +884,10 @@ class Scheduler:
                 req.finish_time = now
                 finished.append(rid)
                 self.mem.free(rid)
+                if self.trace.enabled:
+                    self.trace.request_event(rid, "finish",
+                                             step=self.stats.steps - 1,
+                                             output_tokens=len(req.output))
                 if req.slot is not None:
                     del self.active[req.slot]
                     self.free_slots.append(req.slot)

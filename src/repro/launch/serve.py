@@ -23,6 +23,9 @@ from repro.core.packed_step import supports_packed
 from repro.core.scheduler import SchedulerConfig
 from repro.memory.manager import hbm_kv_pool_blocks
 from repro.models import build_model
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import TraceRecorder
+from repro.obs.perfetto import dump_json, export_chrome
 from repro.serving.engine import Engine
 from repro.serving.metrics import summarize
 from repro.serving.request import Request
@@ -89,6 +92,13 @@ def main():
                          "restores and prefix adoptions pay the synchronous "
                          "host-link cost instead of overlapping compute "
                          "(outputs are token-identical either way)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace.json of the run "
+                         "(open in ui.perfetto.dev); tracing is off — and "
+                         "free — without this flag")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the full metrics summary as NaN-safe JSON "
+                         "(non-finite values serialize as null)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -102,6 +112,7 @@ def main():
     if pool is None and supports_packed(cfg) and args.attn_kernel != "dense":
         pool, pool_basis = sized_kv_pool(cfg, args.hw, args.max_batch,
                                          args.max_len, args.kv_block)
+    tracer = TraceRecorder("engine") if args.trace_out else None
     eng = Engine(model, params, SchedulerConfig(
         chunk_size=args.chunk, max_decode_batch=args.max_batch,
         prefetch_buffer_bytes=int(args.prefetch_mb * 2**20),
@@ -111,7 +122,7 @@ def main():
         enable_prefix_cache=args.prefix_cache,
         admission_watermark=args.admission_watermark,
         async_prefetch=not args.no_async_prefetch),
-        max_len=args.max_len, attn_kernel=args.attn_kernel)
+        max_len=args.max_len, attn_kernel=args.attn_kernel, tracer=tracer)
     rng = np.random.default_rng(0)
     if args.shared_prefix > 0:
         for req in shared_prefix_requests(
@@ -126,9 +137,18 @@ def main():
                                prompt=rng.integers(0, cfg.vocab_size, L).tolist(),
                                max_new_tokens=args.max_new))
     eng.run(max_steps=5000)
+    reg = MetricsRegistry()
+    eng.register_metrics(reg)
     m = summarize(eng.scheduler.requests.values(), horizon=float(max(eng.steps_run, 1)),
                   sched_stats=eng.scheduler.stats, chunk_size=args.chunk,
-                  prefetch_stats=eng.scheduler.prefetch_queue.stats)
+                  prefetch_stats=eng.scheduler.prefetch_queue.stats,
+                  registry=reg)
+    if args.trace_out:
+        export_chrome(tracer, args.trace_out)
+        print(f"[launch.serve] trace written to {args.trace_out}")
+    if args.metrics_json:
+        dump_json(args.metrics_json, m)
+        print(f"[launch.serve] metrics written to {args.metrics_json}")
     # savings are *realized* only when the ragged paged path actually ran;
     # otherwise the number is what it would have saved
     ragged = eng.packed_mode and eng.attn_kernel == "paged"

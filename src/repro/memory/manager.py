@@ -145,6 +145,19 @@ class KVMemoryManager:
     def prefix_cached_blocks(self) -> int:
         return self.prefix.cached_blocks if self.prefix is not None else 0
 
+    def register_metrics(self, reg) -> None:
+        """Declare the memory subsystem's health gauges in a typed metrics
+        registry (historical ``metrics.summarize`` key names)."""
+        reg.gauge("kv_fragmentation", "ratio",
+                  "reserved-but-unused fraction of live physical blocks").set(
+                      self.fragmentation())
+        reg.counter("over_capacity_steps", "steps",
+                    "steps the last surviving decode over-ran the soft "
+                    "budget").inc(float(self.over_capacity_steps))
+        reg.gauge("prefix_cached_blocks", "blocks",
+                  "blocks currently held by the radix prefix cache").set(
+                      float(self.prefix_cached_blocks))
+
     def tokens_of(self, rid: int) -> int:
         t = self.allocator.tables.get(rid)
         return t.num_tokens if t is not None else 0

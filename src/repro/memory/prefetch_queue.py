@@ -120,15 +120,52 @@ class PrefetchQueueStats:
             return float("nan")
         return self.bytes_overlapped / total
 
+    def register_metrics(self, reg) -> None:
+        """Declare the ledger's counters in a typed metrics registry under
+        the historical ``metrics.summarize`` key names."""
+        reg.counter("bytes_overlapped", "bytes",
+                    "transfer bytes landed before their consuming step").inc(
+                        float(self.bytes_overlapped))
+        reg.counter("prefetch_late_bytes", "bytes",
+                    "issued-ahead bytes still unlanded at consume").inc(
+                        float(self.bytes_late))
+        reg.counter("prefetch_sync_bytes", "bytes",
+                    "consumed bytes never issued ahead (synchronous)").inc(
+                        float(self.bytes_sync))
+        reg.counter("prefetch_cancelled_bytes", "bytes",
+                    "issued intents that never found a consumer").inc(
+                        float(self.bytes_cancelled))
+        reg.counter("prefetch_issued", "events",
+                    "transfer intents issued ahead").inc(float(self.issued))
+        reg.counter("prefetch_stall_events", "events",
+                    "consumes that found unlanded bytes").inc(
+                        float(self.stall_events))
+        reg.counter("prefetch_stall_ms", "ms",
+                    "simulator-accumulated prefetch stall time").inc(
+                        self.stall_s * 1e3)
+        reg.gauge("overlap_efficiency", "ratio",
+                  "fraction of needed transfer bytes hidden under earlier "
+                  "compute").set(self.overlap_efficiency())
+
 
 class PrefetchQueue:
-    """Transfer ledger shared by the Scheduler, the engine, and the sim."""
+    """Transfer ledger shared by the Scheduler, the engine, and the sim.
 
-    def __init__(self):
+    ``tracer`` (a ``repro.obs.trace`` recorder; None = disabled) receives
+    one instant per lifecycle transition — issued / landed / consumed /
+    cancelled — which is exactly the per-lane transfer timeline the
+    Perfetto export shows and ``tools/check_trace.py`` checks the
+    consumed-only-after-landed invariant against."""
+
+    def __init__(self, tracer=None):
         self._next_tid = 0
         self.transfers: List[PrefetchTransfer] = []  # issue order
         self._live: Dict[Tuple[int, str], PrefetchTransfer] = {}
         self.stats = PrefetchQueueStats()
+        if tracer is None:
+            from repro.obs.trace import NOOP
+            tracer = NOOP
+        self.trace = tracer
 
     # ------------------------------------------------------------------ issue
     def pending(self, rid: int, kind: str) -> Optional[PrefetchTransfer]:
@@ -153,6 +190,9 @@ class PrefetchQueue:
         self._live[(rid, kind)] = t
         self.stats.issued += 1
         self.stats.bytes_issued += t.nbytes
+        if self.trace.enabled:
+            self.trace.transfer_event(t.tid, rid, kind, ISSUED, t.nbytes,
+                                      issue_step=step)
         return t
 
     # --------------------------------------------------------------- movement
@@ -173,14 +213,20 @@ class PrefetchQueue:
             budget -= take
             moved += take
             t.state = LANDED if t.remaining <= 0 else IN_FLIGHT
+            if self.trace.enabled:
+                self.trace.transfer_event(t.tid, t.rid, t.kind, t.state,
+                                          t.nbytes, moved_bytes=take)
         return moved
 
     def land(self, t: PrefetchTransfer) -> None:
         """Force-land a transfer: the engine calls this once its staged
         host->device copy has been dispatched (the device buffer carries the
         bytes, ordered before any compute that reads them)."""
+        already = t.state == LANDED
         t.remaining = 0.0
         t.state = LANDED
+        if self.trace.enabled and not already:
+            self.trace.transfer_event(t.tid, t.rid, t.kind, LANDED, t.nbytes)
 
     # ---------------------------------------------------------------- reading
     def readable(self, rid: int, kind: str = SWAP_IN) -> bool:
@@ -213,6 +259,10 @@ class PrefetchQueue:
                 self.stats.bytes_sync += nbytes
                 self.stats.stall_events += 1
             self.stats.consumed += 1
+            if self.trace.enabled:
+                self.trace.transfer_event(
+                    t.tid if t is not None else -1, rid, kind, CONSUMED,
+                    nbytes, consume_step=step, late_bytes=nbytes, sync=True)
             return rec
         t.state = CONSUMED
         t.consume_step = step
@@ -227,6 +277,10 @@ class PrefetchQueue:
         self.stats.bytes_late += late
         if late > 0:
             self.stats.stall_events += 1
+        if self.trace.enabled:
+            self.trace.transfer_event(t.tid, rid, kind, CONSUMED, needed,
+                                      consume_step=step, late_bytes=late,
+                                      sync=False)
         return rec
 
     def cancel(self, rid: int, kind: str) -> float:
@@ -238,6 +292,8 @@ class PrefetchQueue:
         t.state = CANCELLED
         self.stats.cancelled += 1
         self.stats.bytes_cancelled += t.nbytes
+        if self.trace.enabled:
+            self.trace.transfer_event(t.tid, rid, kind, CANCELLED, t.nbytes)
         return t.nbytes
 
     # ------------------------------------------------------------- accounting

@@ -1,0 +1,40 @@
+"""Observability subsystem: step-level tracing + typed metrics registry.
+
+Shared by the serving engine and the service simulator (see
+``docs/observability.md``):
+
+  * ``TraceRecorder`` / ``NOOP`` — typed step/lane/transfer/request events,
+    zero-overhead when disabled (``repro.obs.trace``);
+  * ``export_chrome`` — Chrome/Perfetto ``trace.json`` exporter
+    (``repro.obs.perfetto``), validated by ``tools/check_trace.py``;
+  * ``MetricsRegistry`` — counter/gauge/histogram with explicit units;
+    ``serving.metrics.summarize`` is a thin view over it
+    (``repro.obs.registry``);
+  * ``json_safe`` / ``dump_json`` — NaN-safe JSON for every metrics/trace
+    export.
+"""
+from repro.obs.perfetto import dump_json, export_chrome, json_safe, to_chrome
+from repro.obs.registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricCollision,
+    MetricsRegistry,
+)
+from repro.obs.trace import NOOP, NoopTracer, TraceEvent, TraceRecorder
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricCollision",
+    "MetricsRegistry",
+    "NOOP",
+    "NoopTracer",
+    "TraceEvent",
+    "TraceRecorder",
+    "dump_json",
+    "export_chrome",
+    "json_safe",
+    "to_chrome",
+]

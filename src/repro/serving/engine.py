@@ -57,6 +57,14 @@ from repro.core.packed_step import PagedView, packed_step, supports_packed
 from repro.core.scheduler import Scheduler, SchedulerConfig, StepPlan
 from repro.memory.prefetch_queue import ADOPT, SWAP_IN
 from repro.models.model import Model
+from repro.obs.trace import (
+    LANE_COMPUTE,
+    LANE_HOST_LINK,
+    LANE_PREFETCH_STAGE,
+    LANE_SCHED,
+    LANE_STEP,
+    NOOP,
+)
 from repro.serving.request import Request, State
 
 ATTN_KERNELS = ("auto", "paged", "dense")
@@ -127,6 +135,11 @@ class Engine:
         cache_dtype=jnp.float32,
         eos_id: Optional[int] = None,
         attn_kernel: str = "auto",
+        tracer=None,  # a repro.obs TraceRecorder (wall clock) — records step
+        # phase spans (schedule / swap / compute dispatch / prefetch stage),
+        # request lifecycles, and the transfer ledger. Phase durations are
+        # host dispatch times: JAX dispatch is asynchronous, so "compute"
+        # measures enqueue latency, not device occupancy.
     ):
         if attn_kernel not in ATTN_KERNELS:
             raise ValueError(f"unknown attn_kernel {attn_kernel!r}; want one of {ATTN_KERNELS}")
@@ -229,7 +242,8 @@ class Engine:
             self.cache = model.init_cache(self.n_slots + 1, max_len, cache_dtype)
 
         self.sched_cfg = sched_cfg
-        self.scheduler = Scheduler(sched_cfg, model.cfg)
+        self.trace = tracer if tracer is not None else NOOP
+        self.scheduler = Scheduler(sched_cfg, model.cfg, tracer=self.trace)
         self.scheduler.padded_len = max_len  # dense-gather padding extent
 
         if self.packed_mode:
@@ -288,24 +302,60 @@ class Engine:
             if self.step(now=float(self.steps_run)) is None:
                 break
 
+    def register_metrics(self, reg) -> None:
+        """Engine-side gauges for the typed metrics registry: step count,
+        host-tier occupancy, and (paged mode) pool capacity/peak pressure."""
+        reg.counter("engine_steps", "steps", "engine steps executed").inc(
+            self.steps_run)
+        reg.gauge("engine_swap_store_entries", "requests",
+                  "host-tier KV copies currently held").set(
+                      float(len(self.swap_store)))
+        if self.attn_kernel == "paged":
+            reg.gauge("kv_pool_pages", "pages",
+                      "physical pages in the paged KV pool").set(
+                          float(self.num_pool_pages))
+            reg.gauge("kv_pool_peak_used", "pages",
+                      "peak pages simultaneously allocated").set(
+                          float(self.scheduler.mem.allocator.peak_used_blocks))
+
     # ----------------------------------------------------------------- steps
     def step(self, now: float = 0.0) -> Optional[StepPlan]:
+        tr = self.trace
+        t0 = tr.now() if tr.enabled else 0.0
         plan = self.scheduler.next_step(now)
         if plan is None:
             return None
         if plan.prefetch is not None:
             self.prefetch_log.append(plan.prefetch.coverage)
+        t1 = tr.now() if tr.enabled else 0.0
         self._apply_swaps(plan)
         self._verify_landed(plan)
+        t2 = tr.now() if tr.enabled else 0.0
         if self.packed_mode:
             self._run_packed(plan)
         else:
             self._run_two_call(plan)
+        t3 = tr.now() if tr.enabled else 0.0
         # stage next step's predicted transfers NOW: the compute above is
         # dispatched but (on an async backend) still in flight, so these
         # host->device copies ride under it
         self._issue_prefetch(plan)
         self.scheduler.complete_step(plan, now)
+        if tr.enabled:
+            t4 = tr.now()
+            step = self.steps_run
+            tr.span(LANE_STEP, f"step {step}", t0, t4 - t0, step=step,
+                    tokens=plan.total_tokens, decodes=len(plan.decode_rids),
+                    prefill_tokens=plan.total_prefill_tokens)
+            tr.span(LANE_SCHED, "next_step", t0, t1 - t0, step=step)
+            if plan.swapped_out or plan.swapped_in:
+                tr.span(LANE_HOST_LINK, "apply_swaps", t1, t2 - t1,
+                        step=step, swap_out=len(plan.swapped_out),
+                        swap_in=len(plan.swapped_in))
+            tr.span(LANE_COMPUTE, "dispatch", t2, t3 - t2, step=step,
+                    tokens=plan.total_tokens)
+            tr.span(LANE_PREFETCH_STAGE, "stage+complete", t3, t4 - t3,
+                    step=step, issued=len(plan.issued))
         self.steps_run += 1
         return plan
 

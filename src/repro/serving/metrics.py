@@ -1,10 +1,23 @@
-"""Service-level metrics: TTFT / TBT percentiles, scheduling delay, QPS."""
+"""Service-level metrics: TTFT / TBT percentiles, scheduling delay, QPS.
+
+``summarize`` is a thin view over the typed metrics registry
+(``repro.obs.registry``): every component that owns counters —
+``SchedStats``, ``PrefetchQueueStats``, ``KVMemoryManager`` via the
+simulator's ``mem_stats``, and the request-latency histograms registered
+here — declares them with a kind and an explicit unit, and the flat dict
+callers have always consumed is just ``registry.as_dict()``.  Every
+pre-existing key name (and value) survives unchanged; what changed is that
+two components claiming the same name now raise ``MetricCollision``
+instead of one silently overwriting the other (the old blind
+``m.update(mem_stats)``).
+"""
 from __future__ import annotations
 
 from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
+from repro.obs.registry import MetricCollision, MetricsRegistry
 from repro.serving.request import Request
 
 
@@ -14,87 +27,70 @@ def percentile(xs: List[float], p: float) -> float:
     return float(np.percentile(np.asarray(xs), p))
 
 
-def summarize(requests: Iterable[Request], horizon: float,
-              sched_stats=None, chunk_size: Optional[int] = None,
-              mem_stats: Optional[Dict[str, float]] = None,
-              prefetch_stats=None) -> Dict[str, float]:
-    """Aggregate request-level latency metrics; when the scheduler's
-    ``SchedStats`` (and its chunk size) are passed, also surface scheduler
-    health: preemption counts, recompute debt, swap traffic, and packing
-    efficiency. ``mem_stats`` merges memory-subsystem counters (tier
-    hit-rate, swapped bytes, HBM bytes moved/saved) from the service sim.
-    ``prefetch_stats`` (a ``PrefetchQueueStats``) surfaces the async-
-    prefetch ledger: overlapped/late/sync byte split, stall accounting, and
-    overlap efficiency — byte counters are schedule-determined, so the
-    engine and the simulator report identical values for identical
-    workloads; only ``prefetch_stall_ms`` is simulator time."""
+def register_request_metrics(reg: MetricsRegistry,
+                             requests: Iterable[Request],
+                             horizon: float) -> None:
+    """Request-level latency/throughput metrics (the summary's base keys)."""
     reqs = [r for r in requests]
     done = [r for r in reqs if r.finish_time is not None]
-    ttft = [r.first_token_time - r.arrival_time for r in done if r.first_token_time is not None]
-    sched = [r.schedule_time - r.arrival_time for r in done if r.schedule_time is not None]
+    ttft = [r.first_token_time - r.arrival_time for r in done
+            if r.first_token_time is not None]
+    sched = [r.schedule_time - r.arrival_time for r in done
+             if r.schedule_time is not None]
     tbt: List[float] = []
     for r in done:
         tbt.extend(r.tbt_latencies())
     out_tokens = sum(len(r.output) for r in reqs)
-    m = {
-        "completed": len(done),
-        "submitted": len(reqs),
-        "qps_completed": len(done) / horizon if horizon > 0 else float("nan"),
-        "tokens_per_s": out_tokens / horizon if horizon > 0 else float("nan"),
-        "ttft_p50": percentile(ttft, 50),
-        "ttft_p99": percentile(ttft, 99),
-        "tbt_p50": percentile(tbt, 50),
-        "tbt_p99": percentile(tbt, 99),
-        "sched_delay_p99": percentile(sched, 99),
-        "preempted_requests": float(sum(1 for r in reqs if r.preemptions > 0)),
-    }
+    reg.counter("completed", "requests", "requests that finished").inc(
+        len(done))
+    reg.counter("submitted", "requests", "requests submitted").inc(len(reqs))
+    reg.gauge("qps_completed", "req/s", "completed requests per second").set(
+        len(done) / horizon if horizon > 0 else float("nan"))
+    reg.gauge("tokens_per_s", "tok/s", "output tokens per second").set(
+        out_tokens / horizon if horizon > 0 else float("nan"))
+    reg.histogram("ttft", "s", "time to first token",
+                  percentiles=(50, 99)).observe_all(ttft)
+    reg.histogram("tbt", "s", "decode inter-token gap",
+                  percentiles=(50, 99)).observe_all(tbt)
+    reg.histogram("sched_delay", "s", "arrival -> first scheduled chunk",
+                  percentiles=(99,)).observe_all(sched)
+    reg.counter("preempted_requests", "requests",
+                "requests preempted at least once").inc(
+                    float(sum(1 for r in reqs if r.preemptions > 0)))
+
+
+def summarize(requests: Iterable[Request], horizon: float,
+              sched_stats=None, chunk_size: Optional[int] = None,
+              mem_stats: Optional[Dict[str, float]] = None,
+              prefetch_stats=None,
+              registry: Optional[MetricsRegistry] = None) -> Dict[str, float]:
+    """Aggregate request-level latency metrics; when the scheduler's
+    ``SchedStats`` (and its chunk size) are passed, also surface scheduler
+    health: preemption counts, recompute debt, swap traffic, and packing
+    efficiency. ``mem_stats`` merges memory-subsystem counters (tier
+    hit-rate, swapped bytes, HBM bytes moved/saved) from the service sim —
+    a ``mem_stats`` key that collides with an already-registered metric
+    raises ``MetricCollision`` (it used to silently overwrite).
+    ``prefetch_stats`` (a ``PrefetchQueueStats``) surfaces the async-
+    prefetch ledger: overlapped/late/sync byte split, stall accounting, and
+    overlap efficiency — byte counters are schedule-determined, so the
+    engine and the simulator report identical values for identical
+    workloads; only ``prefetch_stall_ms`` is simulator time.  Passing a
+    pre-populated ``registry`` (e.g. the simulator's, with memory gauges
+    already declared) folds those metrics into the same summary."""
+    reg = registry if registry is not None else MetricsRegistry()
+    register_request_metrics(reg, requests, horizon)
     if sched_stats is not None:
-        m["preemptions"] = float(sched_stats.preemptions)
-        m["preempted_tokens"] = float(sched_stats.preempted_tokens)
-        m["prefill_tokens"] = float(sched_stats.prefill_tokens)
-        m["steps"] = float(sched_stats.steps)
-        m["swap_outs"] = float(sched_stats.swap_outs)
-        m["swap_ins"] = float(sched_stats.swap_ins)
-        m["swapped_out_tokens"] = float(sched_stats.swapped_out_tokens)
-        # ragged-attention accounting: block-rounded KV tokens vs the padded
-        # dense-gather reads. In the simulator this is the pricing basis
-        # (always realized); in the engine it is realized only when the
-        # paged path ran (Engine.attn_kernel == "paged") — otherwise it is
-        # the savings the ragged path would have delivered
-        m["attn_tokens_touched"] = float(sched_stats.attn_tokens_touched)
-        m["attn_tokens_padded"] = float(sched_stats.attn_tokens_padded)
-        m["attn_padding_savings"] = sched_stats.attn_padding_savings()
-        # bounded physical pool: admissions/chunks deferred because the
-        # allocator had no free page (0 forever when the pool is unbounded)
-        m["out_of_block_stalls"] = float(sched_stats.out_of_block_stalls)
-        # admission low-watermark back-off (0 forever when disabled)
-        m["watermark_stalls"] = float(sched_stats.watermark_stalls)
-        # radix prefix cache: hit rate over admissions, prefill tokens the
-        # matched prefixes skipped outright, and the HBM fill bytes those
-        # skips never streamed. Priced by the shared formula
-        # (memory.prefix_fill_bytes_saved), so the engine and the service
-        # simulator report identical savings for identical schedules.
-        m["prefix_hits"] = float(sched_stats.prefix_hits)
-        m["prefix_misses"] = float(sched_stats.prefix_misses)
-        m["prefix_hit_rate"] = sched_stats.prefix_hit_rate()
-        m["prefix_tokens_skipped"] = float(sched_stats.prefix_hit_tokens)
-        m["prefix_inserted_blocks"] = float(sched_stats.prefix_inserted_blocks)
-        m["prefix_fill_bytes_saved"] = float(sched_stats.prefix_fill_bytes_saved)
-        # prefetch-plan coverage averaged over steps with plannable bytes
-        # only — vacuous steps (zero demand) are excluded, not scored 1.0
-        m["prefetch_coverage"] = sched_stats.prefetch_coverage()
-        m["prefetch_vacuous_steps"] = float(sched_stats.prefetch_vacuous_steps)
-        if chunk_size is not None:
-            m["packing_efficiency"] = sched_stats.packing_efficiency(chunk_size)
+        sched_stats.register_metrics(reg, chunk_size)
     if prefetch_stats is not None:
-        m["bytes_overlapped"] = float(prefetch_stats.bytes_overlapped)
-        m["prefetch_late_bytes"] = float(prefetch_stats.bytes_late)
-        m["prefetch_sync_bytes"] = float(prefetch_stats.bytes_sync)
-        m["prefetch_cancelled_bytes"] = float(prefetch_stats.bytes_cancelled)
-        m["prefetch_issued"] = float(prefetch_stats.issued)
-        m["prefetch_stall_events"] = float(prefetch_stats.stall_events)
-        m["prefetch_stall_ms"] = prefetch_stats.stall_s * 1e3
-        m["overlap_efficiency"] = prefetch_stats.overlap_efficiency()
+        prefetch_stats.register_metrics(reg)
     if mem_stats:
-        m.update({k: float(v) for k, v in mem_stats.items()})
-    return m
+        for k, v in mem_stats.items():
+            if k in reg:
+                raise MetricCollision(
+                    f"mem_stats key {k!r} collides with an already-"
+                    "registered metric — namespace it instead of "
+                    "overwriting")
+            reg.gauge(k, "", "memory-subsystem counter (mem_stats)").set(
+                float(v))
+    return reg.as_dict()

@@ -47,6 +47,16 @@ from repro.configs.base import ModelConfig
 from repro.core.scheduler import Scheduler, SchedulerConfig
 from repro.memory.prefetch_queue import SWAP_IN as PF_SWAP_IN
 from repro.memory.transfers import TransferEngine
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import (
+    LANE_COMPUTE,
+    LANE_HBM_FILL,
+    LANE_HOST_LINK,
+    LANE_STALL_PREFETCH,
+    LANE_STALL_SYNC,
+    LANE_STEP,
+    NOOP,
+)
 from repro.serving.metrics import summarize
 from repro.serving.workload import WorkloadSpec, sample_requests
 from repro.sim.hardware import Hardware
@@ -123,12 +133,17 @@ def simulate_service(
     requests=None,  # explicit request list overrides workload sampling —
     # lets benchmarks drive the sim and the real engine over the SAME
     # shared-prefix requests so their schedules (and savings) coincide
+    tracer=None,  # a repro.obs TraceRecorder (manual clock) — records step
+    # phase spans (compute / sync stall / prefetch stall), per-lane busy
+    # intervals (host link, HBM fill), the ledger lifecycle, and request
+    # lifecycles, all stamped in simulated seconds
 ) -> ServiceResult:
     buffer_bytes = hw.prefetch_buffer if prefetch_buffer is None else prefetch_buffer
     if mode == "packed":
         buffer_bytes = 0.0
     reqs = (requests if requests is not None
             else sample_requests(workload, n_requests, qps, seed=seed))
+    tr = tracer if tracer is not None else NOOP
     sched = Scheduler(
         SchedulerConfig(chunk_size=chunk, max_decode_batch=max_decode_batch,
                         prefetch_buffer_bytes=int(buffer_bytes),
@@ -142,6 +157,7 @@ def simulate_service(
                         admission_watermark=admission_watermark,
                         async_prefetch=async_prefetch),
         cfg,
+        tracer=tr,
     )
     costs = _StageCostCache(hw, cfg, mode, buffer_bytes)
     dma = TransferEngine(hw)
@@ -164,6 +180,7 @@ def simulate_service(
     overlap_bound_s = 0.0
     compute_s = 0.0
     while steps < max_steps:
+        tr.set_time(t)  # scheduler events this step stamp simulated seconds
         while ai < len(reqs) and reqs[ai].arrival_time <= t:
             sched.add_request(reqs[ai])
             ai += 1
@@ -229,12 +246,43 @@ def simulate_service(
         prefetch_stall = swap_in_late / dma.host_bw
         queue.stats.stall_s += prefetch_stall
         dt = step_t + report.stall_time + prefetch_stall
-        t += dt
+        t0, t = t, t + dt
+        tr.set_time(t)  # land/complete events stamp the step's end
         # background landing: leftover host-link capacity during this
         # step's wall time advances issued-ahead transfers oldest-first —
         # the DMA the engine overlaps by staging under in-flight compute
         sync_host_b = swap_out_b + swap_in_sync + swap_in_late
-        queue.progress(max(0.0, dt * dma.host_bw - sync_host_b))
+        progressed = queue.progress(max(0.0, dt * dma.host_bw - sync_host_b))
+        if tr.enabled:
+            # step phase spans laid out contiguously inside [t0, t0+dt]:
+            # compute, then the sync-transfer stall, then the late-prefetch
+            # stall — plus per-lane busy intervals for the host link (sync
+            # traffic + background landings) and the HBM->BEOL fill engine
+            tr.span(LANE_STEP, f"step {steps}", t0, dt, step=steps,
+                    tokens=plan.total_tokens, decodes=len(plan.decode_rids),
+                    prefill_tokens=plan.total_prefill_tokens)
+            tr.span(LANE_COMPUTE, "compute", t0, step_t, step=steps,
+                    tokens=plan.total_tokens)
+            if report.stall_time > 0:
+                tr.span(LANE_STALL_SYNC, "sync transfer stall",
+                        t0 + step_t, report.stall_time, step=steps,
+                        bytes=sync_host_b - swap_in_late)
+            if prefetch_stall > 0:
+                tr.span(LANE_STALL_PREFETCH, "late prefetch stall",
+                        t0 + step_t + report.stall_time, prefetch_stall,
+                        step=steps, bytes=swap_in_late)
+            host_b = sync_host_b + progressed
+            if host_b > 0:
+                tr.span(LANE_HOST_LINK, "kv dma", t0,
+                        min(dt, host_b / dma.host_bw), step=steps,
+                        bytes=host_b)
+            if report.earned_fill_bytes > 0:
+                tr.span(LANE_HBM_FILL, "beol fill", t0,
+                        min(dt, report.earned_fill_bytes / hw.hbm_bw),
+                        step=steps, bytes=report.earned_fill_bytes)
+            tr.counter("kv_pool_used_blocks", sched.mem.device_blocks, ts=t)
+            tr.counter("prefetch_in_flight_bytes", queue.in_flight_bytes(),
+                       ts=t)
         # overlap-bench reference bounds (host-link transfer demand priced
         # as if nothing overlapped vs everything overlapped)
         host_demand_t = (swap_out_b + swap_in_demand) / dma.host_bw
@@ -265,24 +313,32 @@ def simulate_service(
         sched.complete_step(plan, now=t)
         steps += 1
 
-    mem_stats = {
-        "tier_hit_rate": (kv_hit / kv_want) if kv_want else float("nan"),
-        "swapped_bytes": swapped_bytes,
-        "hbm_bytes_moved": hbm_moved,
-        "hbm_bytes_saved": hbm_saved,
-        "prefetch_fill_bytes": fills_moved,
-        "kv_fragmentation": sched.mem.fragmentation(),
-        "over_capacity_steps": float(sched.mem.over_capacity_steps),
-        "prefix_cached_blocks": float(sched.mem.prefix_cached_blocks),
-        # overlap-bench reference bounds: what the same schedule would cost
-        # fully serialized vs perfectly overlapped (per-step max)
-        "compute_time_s": compute_s,
-        "serial_time_s": serial_s,
-        "overlap_bound_s": overlap_bound_s,
-    }
+    reg = MetricsRegistry()
+    reg.gauge("tier_hit_rate", "ratio",
+              "decode-attention KV bytes served from BEOL").set(
+                  (kv_hit / kv_want) if kv_want else float("nan"))
+    reg.gauge("swapped_bytes", "bytes", "host-link swap traffic, both "
+              "directions").set(swapped_bytes)
+    reg.gauge("hbm_bytes_moved", "bytes",
+              "bytes that actually crossed HBM").set(hbm_moved)
+    reg.gauge("hbm_bytes_saved", "bytes",
+              "KV bytes served from retained BEOL blocks instead").set(
+                  hbm_saved)
+    reg.gauge("prefetch_fill_bytes", "bytes",
+              "HBM->BEOL fill bytes that landed").set(fills_moved)
+    # overlap-bench reference bounds: what the same schedule would cost
+    # fully serialized vs perfectly overlapped (per-step max)
+    reg.gauge("compute_time_s", "s", "sum of per-step compute time").set(
+        compute_s)
+    reg.gauge("serial_time_s", "s",
+              "compute + all host transfers, fully serialized").set(serial_s)
+    reg.gauge("overlap_bound_s", "s",
+              "per-step max(compute, transfer) lower bound").set(
+                  overlap_bound_s)
+    sched.mem.register_metrics(reg)
     m = summarize(sched.requests.values(), horizon=max(t, 1e-9),
-                  sched_stats=sched.stats, chunk_size=chunk, mem_stats=mem_stats,
-                  prefetch_stats=queue.stats)
+                  sched_stats=sched.stats, chunk_size=chunk,
+                  prefetch_stats=queue.stats, registry=reg)
     return ServiceResult(metrics=m, steps=steps, sim_time=t)
 
 

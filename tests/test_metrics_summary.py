@@ -1,0 +1,113 @@
+"""``metrics.summarize`` as a registry view: edge cases + key survival.
+
+The PR 6 summary had a blind ``m.update(mem_stats)`` that silently
+overwrote scheduler keys with memory-subsystem keys on a name clash; the
+registry-backed rewrite raises ``MetricCollision`` instead (regression
+test here), while keeping every historical key name and value type.
+"""
+from __future__ import annotations
+
+import math
+
+import pytest
+
+from repro.core.scheduler import SchedStats
+from repro.memory.prefetch_queue import PrefetchQueueStats
+from repro.obs import MetricCollision, MetricsRegistry
+from repro.serving.metrics import percentile, summarize
+from repro.serving.request import Request
+
+# the flat dict shape every pre-PR-7 caller consumed (launch.serve format
+# strings, benchmarks, figures) — summarize must keep emitting all of it
+BASE_KEYS = {"completed", "submitted", "qps_completed", "tokens_per_s",
+             "ttft_p50", "ttft_p99", "tbt_p50", "tbt_p99", "sched_delay_p99",
+             "preempted_requests"}
+SCHED_KEYS = {"preemptions", "preempted_tokens", "prefill_tokens", "steps",
+              "swap_outs", "swap_ins", "swapped_out_tokens",
+              "attn_tokens_touched", "attn_tokens_padded",
+              "attn_padding_savings", "out_of_block_stalls",
+              "watermark_stalls", "prefix_hits", "prefix_misses",
+              "prefix_hit_rate", "prefix_tokens_skipped",
+              "prefix_inserted_blocks", "prefix_fill_bytes_saved",
+              "prefetch_coverage", "prefetch_vacuous_steps",
+              "packing_efficiency"}
+PREFETCH_KEYS = {"bytes_overlapped", "prefetch_late_bytes",
+                 "prefetch_sync_bytes", "prefetch_cancelled_bytes",
+                 "prefetch_issued", "prefetch_stall_events",
+                 "prefetch_stall_ms", "overlap_efficiency"}
+
+
+def finished_request(rid=0, n_out=3):
+    r = Request(rid=rid, prompt=[1, 2, 3, 4], max_new_tokens=n_out,
+                arrival_time=0.0)
+    r.schedule_time = 0.5
+    r.first_token_time = 1.0
+    r.token_times = [1.0 + 0.1 * i for i in range(n_out)]
+    r.output = [0] * n_out
+    r.finish_time = r.token_times[-1]
+    return r
+
+
+def test_every_preexisting_key_survives():
+    m = summarize([finished_request()], horizon=2.0, sched_stats=SchedStats(),
+                  chunk_size=16, mem_stats={"tier_hit_rate": 0.5},
+                  prefetch_stats=PrefetchQueueStats())
+    assert set(m) >= BASE_KEYS | SCHED_KEYS | PREFETCH_KEYS | {"tier_hit_rate"}
+
+
+def test_zero_completed_requests():
+    m = summarize([], horizon=1.0)
+    assert m["completed"] == 0 and m["submitted"] == 0
+    assert m["qps_completed"] == 0.0 and m["tokens_per_s"] == 0.0
+    assert math.isnan(m["ttft_p50"]) and math.isnan(m["tbt_p99"])
+    assert math.isnan(m["sched_delay_p99"])
+
+
+def test_zero_horizon_rates_are_nan_not_crash():
+    m = summarize([finished_request()], horizon=0.0)
+    assert math.isnan(m["qps_completed"]) and math.isnan(m["tokens_per_s"])
+    assert m["completed"] == 1
+
+
+def test_finished_request_without_first_token():
+    r = finished_request()
+    r.first_token_time = None
+    m = summarize([r], horizon=1.0)
+    assert m["completed"] == 1
+    assert math.isnan(m["ttft_p50"])  # no TTFT sample, still no crash
+
+
+def test_prefetch_stats_without_sched_stats():
+    m = summarize([finished_request()], horizon=1.0,
+                  prefetch_stats=PrefetchQueueStats())
+    assert PREFETCH_KEYS <= set(m)
+    assert "preemptions" not in m  # sched keys only appear with sched_stats
+
+
+def test_mem_stats_collision_raises():
+    # the PR 6 bug: mem_stats silently clobbered scheduler keys
+    with pytest.raises(MetricCollision):
+        summarize([], horizon=1.0, sched_stats=SchedStats(),
+                  mem_stats={"preemptions": 999.0})
+
+
+def test_mem_stats_collision_with_base_keys_raises():
+    with pytest.raises(MetricCollision):
+        summarize([], horizon=1.0, mem_stats={"completed": 7.0})
+
+
+def test_counts_stay_ints():
+    m = summarize([finished_request()], horizon=1.0)
+    assert isinstance(m["completed"], int) and isinstance(m["submitted"], int)
+
+
+def test_prepopulated_registry_folds_in():
+    reg = MetricsRegistry()
+    reg.gauge("tier_hit_rate", "ratio").set(0.75)
+    m = summarize([], horizon=1.0, registry=reg)
+    assert m["tier_hit_rate"] == 0.75 and m["completed"] == 0
+
+
+def test_percentile_empty_is_nan():
+    assert math.isnan(percentile([], 99))
+    assert percentile([1.0, 2.0, 3.0], 50) == 2.0

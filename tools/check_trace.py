@@ -1,0 +1,225 @@
+#!/usr/bin/env python3
+"""Trace-invariant checker for repro.obs Chrome/Perfetto traces.
+
+    python tools/check_trace.py trace.json [--compare other_trace.json]
+
+Validates a trace emitted by ``repro.obs.perfetto.export_chrome`` against
+the pipeline's structural invariants:
+
+  * **format** — the file is strict JSON (no ``NaN``/``Infinity`` tokens),
+    is the ``{"traceEvents": [...]}`` object form, and every event carries
+    the fields its phase requires (``X`` needs numeric ``ts``/``dur``,
+    ``dur >= 0``);
+  * **lanes** — per-lane ``X`` spans never overlap: each (pid, tid) row is
+    a resource timeline, and a resource cannot be busy twice at once
+    (adjacent spans may share an endpoint exactly);
+  * **ledger** — per-transfer lifecycle order on the prefetch-queue lane:
+    ``issued`` precedes everything else for its tid, nothing is ``consumed``
+    before it ``landed`` unless the consume receipt says so (``late_bytes >
+    0`` or ``sync``), and each tid reaches at most one terminal state
+    (consumed / cancelled) with no events after it;
+  * **requests** — every admitted request reaches a terminal ``finish``
+    event (no request is silently dropped mid-flight);
+  * **compare** (``--compare``) — the schedule-determined event sequences
+    (the ``args.sched`` canonical keys) of two traces are identical: the
+    engine and the simulator, driven by the same Scheduler over the same
+    workload, must have executed the same schedule.
+
+Exit status: 0 clean, 1 invariant violations (listed on stderr), 2 usage /
+unreadable input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+QUEUE_LANE = "prefetch_queue"
+REQUEST_LANE = "request"
+TERMINAL_STATES = ("consumed", "cancelled")
+# float-µs slack for shared span endpoints (a*c + b*c vs (a+b)*c ulp noise);
+# one nanosecond — far below any real span, far above double rounding
+EPS_US = 1e-3
+
+
+def _reject_nonfinite(tok: str):
+    raise ValueError(f"non-finite JSON token {tok!r} (export is not NaN-safe)")
+
+
+def load_trace(path: str) -> dict:
+    """Strict-JSON load: the Python parser accepts ``NaN``/``Infinity`` by
+    default, which every other consumer (Perfetto included) rejects — so we
+    reject them too."""
+    with open(path) as f:
+        return json.load(f, parse_constant=_reject_nonfinite)
+
+
+def check_format(trace: dict, errs: List[str]) -> List[dict]:
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        errs.append("top level is not the {'traceEvents': [...]} object form")
+        return []
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            errs.append(f"event {i}: not an object")
+            continue
+        ph = e.get("ph")
+        if not isinstance(e.get("name"), str) or ph not in ("X", "i", "C", "M"):
+            errs.append(f"event {i}: missing name or unknown ph {ph!r}")
+            continue
+        if ph == "M":
+            continue
+        if not isinstance(e.get("pid"), int) or not isinstance(
+                e.get("ts", 0.0), (int, float)):
+            errs.append(f"event {i}: missing pid or non-numeric ts")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)):
+                errs.append(f"event {i} ({e['name']!r}): X span without "
+                            "numeric dur")
+            elif dur < 0:
+                errs.append(f"event {i} ({e['name']!r}): negative dur {dur}")
+    return events
+
+
+def check_lane_overlap(events: List[dict], errs: List[str]) -> None:
+    rows: Dict[Tuple[int, int], List[Tuple[float, float, str]]] = {}
+    for e in events:
+        if e.get("ph") != "X":
+            continue
+        ts, dur = e.get("ts"), e.get("dur")
+        if not isinstance(ts, (int, float)) or not isinstance(
+                dur, (int, float)):
+            continue  # already reported by check_format
+        rows.setdefault((e.get("pid", 0), e.get("tid", 0)), []).append(
+            (float(ts), float(ts) + float(dur), e["name"]))
+    for (pid, tid), spans in sorted(rows.items()):
+        spans.sort()
+        for (s0, e0, n0), (s1, _e1, n1) in zip(spans, spans[1:]):
+            if s1 < e0 - EPS_US:
+                errs.append(
+                    f"lane overlap pid={pid} tid={tid}: {n0!r} "
+                    f"[{s0:.3f}, {e0:.3f}]us overlaps {n1!r} starting "
+                    f"{s1:.3f}us")
+
+
+def check_transfer_lifecycle(events: List[dict], errs: List[str]) -> None:
+    # tid -> list of (file order index, state, args) on the queue lane
+    seen: Dict[int, List[Tuple[int, str, dict]]] = {}
+    for i, e in enumerate(events):
+        if e.get("ph") != "i" or e.get("cat") != QUEUE_LANE:
+            continue
+        args = e.get("args", {})
+        tid = args.get("tid")
+        state = args.get("state")
+        if tid is None or state is None:
+            errs.append(f"event {i} ({e['name']!r}): queue-lane instant "
+                        "without tid/state args")
+            continue
+        if tid == -1:
+            continue  # sync consume with no prior intent: no lifecycle
+        seen.setdefault(int(tid), []).append((i, str(state), args))
+    for tid, evs in sorted(seen.items()):
+        landed = False
+        terminal: Optional[str] = None
+        for j, (i, state, args) in enumerate(evs):
+            if terminal is not None:
+                errs.append(f"transfer {tid}: event {i} ({state!r}) after "
+                            f"terminal state {terminal!r}")
+                break
+            if j == 0 and state != "issued":
+                errs.append(f"transfer {tid}: first event is {state!r}, "
+                            "not 'issued'")
+            if state == "landed":
+                landed = True
+            elif state == "consumed":
+                late = float(args.get("late_bytes", 0.0) or 0.0)
+                if not landed and late <= 0 and not args.get("sync"):
+                    errs.append(
+                        f"transfer {tid}: consumed at event {i} before any "
+                        "'landed' event, with no late/sync bytes in the "
+                        "receipt — a step read un-landed pages")
+                terminal = state
+            elif state == "cancelled":
+                terminal = state
+
+
+def check_request_terminal(events: List[dict], errs: List[str]) -> None:
+    admitted, finished = set(), set()
+    for e in events:
+        if e.get("ph") != "i" or e.get("cat") != REQUEST_LANE:
+            continue
+        rid = e.get("args", {}).get("rid")
+        if rid is None:
+            continue
+        if e["name"] == "admit":
+            admitted.add(rid)
+        elif e["name"] == "finish":
+            finished.add(rid)
+    for rid in sorted(admitted - finished):
+        errs.append(f"request {rid}: admitted but never reached a terminal "
+                    "'finish' event")
+
+
+def sched_sequence(events: List[dict]) -> List[str]:
+    return [e["args"]["sched"] for e in events
+            if e.get("ph") == "i" and "sched" in e.get("args", {})]
+
+
+def check_compare(a: List[dict], b: List[dict], name_a: str, name_b: str,
+                  errs: List[str]) -> None:
+    sa, sb = sched_sequence(a), sched_sequence(b)
+    if len(sa) != len(sb):
+        errs.append(f"sched-sequence length mismatch: {name_a} has "
+                    f"{len(sa)} schedule-determined events, {name_b} has "
+                    f"{len(sb)}")
+    for i, (ka, kb) in enumerate(zip(sa, sb)):
+        if ka != kb:
+            errs.append(f"sched-sequence divergence at index {i}:\n"
+                        f"  {name_a}: {ka}\n  {name_b}: {kb}")
+            break
+
+
+def check_file(path: str, errs: List[str]) -> List[dict]:
+    events = check_format(load_trace(path), errs)
+    check_lane_overlap(events, errs)
+    check_transfer_lifecycle(events, errs)
+    check_request_terminal(events, errs)
+    return events
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="validate repro.obs trace invariants")
+    ap.add_argument("trace", help="trace.json to validate")
+    ap.add_argument("--compare", default=None, metavar="OTHER",
+                    help="second trace (other backend, same workload): "
+                         "assert identical schedule-determined sequences")
+    args = ap.parse_args(argv)
+
+    errs: List[str] = []
+    try:
+        events = check_file(args.trace, errs)
+        if args.compare:
+            other = check_file(args.compare, errs)
+            check_compare(events, other, args.trace, args.compare, errs)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"check_trace: cannot load trace: {e}", file=sys.stderr)
+        return 2
+
+    if errs:
+        for e in errs:
+            print(f"check_trace: VIOLATION: {e}", file=sys.stderr)
+        print(f"check_trace: {len(errs)} violation(s) in {args.trace}"
+              + (f" / {args.compare}" if args.compare else ""),
+              file=sys.stderr)
+        return 1
+    n = len([e for e in events if e.get('ph') != 'M'])
+    print(f"check_trace: OK — {n} events, invariants hold"
+          + (", sched sequences identical" if args.compare else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
