@@ -28,7 +28,7 @@ def main() -> None:
     only = set(filter(None, args.only.split(",")))
     fast = args.fast or args.smoke
 
-    from benchmarks import (fig5_stage_latency, fig6_memory_sweep,
+    from benchmarks import (chaos_bench, fig5_stage_latency, fig6_memory_sweep,
                             fig7_service_throughput, fig8_chunk_tradeoff,
                             kernels_micro, overlap_bench, prefix_cache_bench,
                             roofline)
@@ -51,6 +51,11 @@ def main() -> None:
         # max(compute, transfer), and token-identity async on vs off
         ("overlap", lambda: overlap_bench.run(smoke=args.smoke,
                                               json_path=kernels_json)),
+        # deterministic fault injection over the overlap + prefix-cache
+        # workloads: token identity under chaos, clean ledger teardown,
+        # engine/sim retry-counter agreement, degraded-mode recovery
+        ("chaos", lambda: chaos_bench.run(smoke=args.smoke,
+                                          json_path=kernels_json)),
         ("roofline", lambda: roofline.run()),
     ]
     failed = []

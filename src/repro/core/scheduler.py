@@ -64,7 +64,9 @@ from repro.memory.prefetch_queue import (
     PrefetchQueue,
     PrefetchTransfer,
 )
-from repro.obs.trace import NOOP
+from repro.obs.trace import LANE_SCHED, NOOP
+from repro.robustness.degraded import DegradedModeController
+from repro.robustness.faults import FaultInjector, FaultPlan, RetryPolicy
 from repro.serving.request import Request, State
 from repro.sim.opcost import kv_tokens_touched
 
@@ -123,8 +125,38 @@ class SchedulerConfig:
     # False restores the fully synchronous PR 2 pricing/copy path; greedy
     # outputs are token-identical either way.
     async_prefetch: bool = True
+    # --- robustness knobs (repro.robustness; all inert at their defaults) ---
+    # deterministic fault schedule perturbing the transfer/memory layers
+    # (None = no chaos: every fault path below is dead code and behavior is
+    # bit-identical to a faultless build)
+    fault_plan: Optional[FaultPlan] = None
+    # bounded retry budget + exponential backoff for failed transfers; a
+    # swap-in that exhausts it falls back to recompute (token-identical)
+    max_transfer_retries: int = 3
+    retry_backoff_steps: int = 1
+    # per-request wall deadline relative to arrival (engine: steps, sim:
+    # seconds — whatever clock drives ``next_step(now)``); requests past it
+    # are cancelled cleanly (allocator/prefix/ledger refs all released).
+    # Request.deadline (absolute) composes with this: the earlier one wins.
+    request_timeout: Optional[float] = None
+    # degraded mode: when the rolling transfer-failure rate over
+    # ``degraded_window`` steps crosses ``degraded_threshold``, async
+    # prefetch is disabled and new admissions are deferred until the rate
+    # clears (hysteresis at threshold/2). None disables the controller.
+    degraded_threshold: Optional[float] = None
+    degraded_window: int = 16
+    degraded_min_events: int = 4
 
     def __post_init__(self):
+        if self.max_transfer_retries < 0:
+            raise ValueError("max_transfer_retries must be >= 0")
+        if self.retry_backoff_steps < 1:
+            raise ValueError("retry_backoff_steps must be >= 1")
+        if self.request_timeout is not None and self.request_timeout <= 0:
+            raise ValueError("request_timeout must be > 0 when set")
+        if self.degraded_threshold is not None \
+                and not 0.0 < self.degraded_threshold <= 1.0:
+            raise ValueError("degraded_threshold must be in (0, 1] when set")
         if self.policy not in POLICIES:
             raise ValueError(f"unknown policy {self.policy!r}; want one of {POLICIES}")
         if self.preemption not in PREEMPTION_MODES:
@@ -178,6 +210,14 @@ class StepPlan:
     # step's restores/adoptions (receipt.remaining = stall debt in bytes)
     issued: List[PrefetchTransfer] = dataclasses.field(default_factory=list)
     consumed: List[ConsumeReceipt] = dataclasses.field(default_factory=list)
+    # fault recovery: transfers whose retry/delay window opened this step —
+    # the engine re-attempts their staged copies (empty without an injector)
+    retried: List[PrefetchTransfer] = dataclasses.field(default_factory=list)
+    # this plan's step index (pre-increment); -1 until next_step stamps it
+    step: int = -1
+    # True for a robustness "pump" cycle: zero scheduled tokens, emitted
+    # only so retry/backoff clocks advance while every restore is parked
+    pump: bool = False
 
     @property
     def total_prefill_tokens(self) -> int:
@@ -243,6 +283,14 @@ class SchedStats:
     prefetch_steps: int = 0
     prefetch_vacuous_steps: int = 0
     prefetch_coverage_sum: float = 0.0
+    # robustness / graceful degradation (all zero without faults/deadlines)
+    fallback_recomputes: int = 0  # swap restores that fell back to recompute
+    deadline_cancellations: int = 0  # requests killed past their deadline
+    cancelled_requests: int = 0  # all cancellations (deadline + shutdown)
+    degraded_mode_steps: int = 0  # steps spent in degraded mode
+    degraded_sheds: int = 0  # steps that deferred admissions while degraded
+    injected_oob_stalls: int = 0  # admission stalls caused by phantom pressure
+    pump_steps: int = 0  # zero-token cycles emitted to tick retry clocks
 
     def packing_efficiency(self, chunk_size: int) -> float:
         """Scheduled tokens / chunk budget — 1.0 means every step was full."""
@@ -330,6 +378,27 @@ class SchedStats:
         reg.counter("prefetch_vacuous_steps", "steps",
                     "steps with zero plannable prefetch bytes").inc(
                         float(self.prefetch_vacuous_steps))
+        reg.counter("fallback_recomputes", "events",
+                    "swap restores that exhausted retries and fell back to "
+                    "recompute").inc(float(self.fallback_recomputes))
+        reg.counter("deadline_cancellations", "events",
+                    "requests cancelled past their deadline").inc(
+                        float(self.deadline_cancellations))
+        reg.counter("cancelled_requests", "requests",
+                    "requests cancelled (deadline, shutdown, ...)").inc(
+                        float(self.cancelled_requests))
+        reg.counter("degraded_mode_steps", "steps",
+                    "steps spent in degraded mode (prefetch off, admissions "
+                    "deferred)").inc(float(self.degraded_mode_steps))
+        reg.counter("degraded_sheds", "events",
+                    "steps that deferred new admissions while degraded").inc(
+                        float(self.degraded_sheds))
+        reg.counter("injected_oob_stalls", "events",
+                    "admission stalls caused by injected phantom pool "
+                    "pressure").inc(float(self.injected_oob_stalls))
+        reg.counter("pump_steps", "steps",
+                    "zero-token cycles emitted to advance retry/backoff "
+                    "clocks").inc(float(self.pump_steps))
         if chunk_size is not None:
             reg.gauge("packing_efficiency", "ratio",
                       "scheduled tokens / chunk budget (1.0 = every step "
@@ -358,11 +427,32 @@ class Scheduler:
         )
         self.planner = PrefetchPlanner(model_cfg, cfg.prefetch_buffer_bytes,
                                        mem=self.mem)
+        # fault injection + graceful degradation (repro.robustness): the
+        # injector deals deterministic per-attempt verdicts into the ledger,
+        # the retry policy bounds recovery, and the controller flips the
+        # degraded-mode switch off the rolling failure rate.  All inert at
+        # the default config — the fault-free paths stay bit-identical.
+        self.injector = FaultInjector(cfg.fault_plan)
+        self.degraded: Optional[DegradedModeController] = None
+        if cfg.degraded_threshold is not None:
+            self.degraded = DegradedModeController(
+                cfg.degraded_threshold, window=cfg.degraded_window,
+                min_events=cfg.degraded_min_events)
+        self._fail_seen = 0
+        self._attempt_seen = 0
+        self._deadlines = cfg.request_timeout is not None
+        # rids whose backing state (engine swap_store/_staged rows) must be
+        # purged: cancelled requests and swap->recompute fallbacks. The
+        # engine drains this via drain_released() right after next_step.
+        self._released: List[Tuple[int, str]] = []
         # in-flight/landed transfer ledger: next-step swap-in restores and
         # prefix re-adoptions are issued here one step ahead; the engine
         # lands them as its staged copies dispatch, the sim advances them
         # with each step's residual host-link bandwidth
-        self.prefetch_queue = PrefetchQueue(tracer=self.trace)
+        self.prefetch_queue = PrefetchQueue(
+            tracer=self.trace, injector=self.injector,
+            retry=RetryPolicy(max_retries=cfg.max_transfer_retries,
+                              backoff_steps=cfg.retry_backoff_steps))
         self.waiting: List[Request] = []
         self.active: Dict[int, Request] = {}  # slot -> request (prefill or decode)
         self.free_slots: List[int] = list(range(cfg.max_decode_batch))
@@ -395,6 +485,8 @@ class Scheduler:
         self.requests[req.rid] = req
         req.state = State.QUEUED
         self.waiting.append(req)
+        if req.deadline is not None:
+            self._deadlines = True
         if self.trace.enabled:
             # sched_key=False: the engine submits up front, the sim admits
             # arrivals on its clock — stream *positions* legitimately differ
@@ -549,9 +641,23 @@ class Scheduler:
         and the capacity budget allows. If nothing is decoding, the oldest
         swapped request is force-restored so the system always progresses —
         same soft-capacity escape hatch as the never-preempt-last-decode
-        rule."""
+        rule.
+
+        Fault recovery rides the head of the queue: a restore whose swap-in
+        transfer exhausted its retries falls back to recompute (the host
+        copy is dropped and the request re-prefills prompt + output —
+        token-identical under greedy); a restore mid-retry stays parked so
+        the retried transfer lands first (restores are strictly
+        oldest-first, so nothing overtakes it)."""
         while self.swapped and self.free_slots:
             req = self.swapped[0]
+            if self.injector.enabled:
+                reason = self.prefetch_queue.take_aborted(req.rid, SWAP_IN)
+                if reason is not None:
+                    self._fallback_recompute(req, reason)
+                    continue
+                if self.prefetch_queue.blocked(req.rid, SWAP_IN):
+                    break  # retry in flight/backoff: park until it lands
             decode_rids = [r.rid for r in self.active.values()
                            if r.state == State.DECODE]
             # pages the restore mints: spilled blocks + this step's decode
@@ -584,10 +690,143 @@ class Scheduler:
                 self.trace.request_event(req.rid, "swap_in",
                                          step=self.stats.steps, slot=req.slot)
 
+    # ----------------------------------------------------- robustness hooks
+    def _fallback_recompute(self, req: Request, reason: str) -> None:
+        """Swap restore gave up (retries exhausted): drop the host copy and
+        recompute instead.  The generated output joins the effective prompt
+        and the request re-prefills from scratch — greedy tokens are
+        identical to the fault-free run, only latency is lost."""
+        self.swapped.remove(req)
+        # a speculative SWAP_IN intent may have been re-issued between the
+        # abort and this discovery — tear it down with the host copy
+        self.prefetch_queue.cancel(req.rid, SWAP_IN, reason="swap_fallback")
+        self.stats.preempted_tokens += req.context_len  # recompute debt
+        self.mem.drop_swapped(req.rid)
+        self._released.append((req.rid, "swap_fallback"))
+        self.stats.fallback_recomputes += 1
+        req.restart_output_len = len(req.output)
+        self._requeue_recompute(req)
+        if self.trace.enabled:
+            # sched_key=False: which step discovers the abort is fault-
+            # schedule detail, not part of the canonical schedule record
+            self.trace.request_event(req.rid, "fallback",
+                                     step=self.stats.steps, sched_key=False,
+                                     reason=reason)
+
+    def cancel_request(self, rid: int, reason: str, now: float = 0.0) -> bool:
+        """Cancel a request in ANY non-terminal state, releasing everything
+        it holds: scheduler queues/slots, allocator refs (incl. prefix-cache
+        COW shares), host swap records, and outstanding ledger intents.  The
+        engine purges its swap_store/_staged rows via ``drain_released``.
+        ``finish_time`` stays None so the request never counts as completed.
+        Returns True iff the request existed and was cancelled."""
+        req = self.requests.get(rid)
+        if req is None or req.state in (State.DONE, State.CANCELLED):
+            return False
+        q = self.prefetch_queue
+        q.cancel(rid, SWAP_IN, reason=reason)
+        q.cancel(rid, ADOPT, reason=reason)
+        q.take_aborted(rid, SWAP_IN)  # an un-taken abort dies with the rid
+        if req.state == State.QUEUED:
+            self.waiting.remove(req)
+        elif req.state == State.SWAPPED:
+            self.swapped.remove(req)
+            self.mem.drop_swapped(rid)
+        else:  # PREFILL or DECODE: owns a slot and (usually) a block table
+            if req in self.prefilling:
+                self.prefilling.remove(req)
+            if req.slot is not None:
+                del self.active[req.slot]
+                self.free_slots.append(req.slot)
+                self.free_slots.sort()
+                req.slot = None
+            if rid in self.mem.allocator.tables:
+                self.mem.free(rid)
+        self._released.append((rid, reason))
+        req.state = State.CANCELLED
+        req.cancel_reason = reason
+        self.stats.cancelled_requests += 1
+        if self.trace.enabled:
+            self.trace.request_event(rid, "cancel", step=self.stats.steps,
+                                     sched_key=False, reason=reason)
+        return True
+
+    def cancel_all(self, reason: str = "shutdown", now: float = 0.0) -> int:
+        """Cancel every non-terminal request (graceful shutdown). Returns
+        the number cancelled."""
+        return sum(1 for rid in list(self.requests)
+                   if self.cancel_request(rid, reason, now))
+
+    def drain_released(self) -> List[Tuple[int, str]]:
+        """Hand the engine the rids whose backing state (swap_store rows,
+        staged device copies) must be purged, clearing the log."""
+        out, self._released = self._released, []
+        return out
+
+    def _expire_deadlines(self, now: float) -> None:
+        """Cancel requests past their deadline.  ``Request.deadline`` is an
+        absolute time on the driving clock; ``cfg.request_timeout`` is
+        relative to arrival; the earlier of the two wins."""
+        timeout = self.cfg.request_timeout
+        for req in list(self.requests.values()):
+            if req.state in (State.DONE, State.CANCELLED):
+                continue
+            deadline = req.deadline
+            if timeout is not None:
+                rel = req.arrival_time + timeout
+                deadline = rel if deadline is None else min(deadline, rel)
+            if deadline is not None and now > deadline:
+                if self.cancel_request(req.rid, "deadline", now):
+                    self.stats.deadline_cancellations += 1
+
+    def _degraded_now(self) -> bool:
+        return self.degraded is not None and self.degraded.degraded
+
+    def _robustness_tick(self, plan: StepPlan, now: float) -> None:
+        """Top-of-step robustness pass: expire deadlines, pump the ledger's
+        fault/retry state machine, and feed the degraded-mode controller
+        one (failures, attempts) observation."""
+        step = self.stats.steps
+        if self._deadlines:
+            self._expire_deadlines(now)
+        if self.injector.enabled:
+            plan.retried = self.prefetch_queue.retry_tick(step)
+        if self.degraded is not None:
+            qs = self.prefetch_queue.stats
+            attempts = qs.issued + qs.transfer_retries
+            flipped = self.degraded.observe(
+                step, qs.transfer_failures - self._fail_seen,
+                attempts - self._attempt_seen)
+            self._fail_seen = qs.transfer_failures
+            self._attempt_seen = attempts
+            if flipped and self.trace.enabled:
+                what = "degraded_enter" if self.degraded.degraded else "degraded_exit"
+                self.trace.instant(LANE_SCHED, what, step=step,
+                                   rate=self.degraded.rate())
+            if self.degraded.degraded:
+                self.stats.degraded_mode_steps += 1
+
+    def _needs_pump(self, plan: StepPlan) -> bool:
+        """An empty plan normally means "safe to idle" — except mid-recovery:
+        with a retried transfer to re-attempt or every restore parked on a
+        backoff, the backends must emit a zero-token cycle so the retry
+        clocks keep ticking (bounded: every failed transfer either retries
+        or aborts into a recompute fallback within the retry budget)."""
+        if plan.retried:
+            return True
+        if not (self.injector.enabled and self.swapped):
+            return False
+        q = self.prefetch_queue
+        return any(q.blocked(r.rid, SWAP_IN) or q.has_aborted(r.rid, SWAP_IN)
+                   for r in self.swapped)
+
     # ----------------------------------------------------------------- steps
     def next_step(self, now: float = 0.0) -> Optional[StepPlan]:
         """Build the next packed step, mutating request bookkeeping."""
         plan = StepPlan(decode_slots=[], decode_rids=[])
+        plan.step = self.stats.steps
+        if self.injector.enabled or self.degraded is not None or self._deadlines:
+            self._robustness_tick(plan, now)
 
         # KV-pressure preemption: each decode grows its context by one this
         # step; shed victims until the projected block occupancy fits. Never
@@ -637,6 +876,7 @@ class Scheduler:
         stalled: set = set()  # rids whose chunk was pool-blocked this step
         admission_stalled = False
         watermark_stalled = False
+        degraded_stalled = False
         while True:
             scheduled: set = set()  # rids already visited this pass
             while budget > 0:
@@ -646,10 +886,29 @@ class Scheduler:
                     if not (self.waiting and self.free_slots
                             and len(self.prefilling) < self.cfg.max_concurrent_prefills):
                         break
-                    if not self.mem.has_block_headroom():
+                    if self._degraded_now() and (self.active or self.swapped):
+                        # degraded mode sheds NEW admissions (deferral, not
+                        # rejection: the request stays queued) while already-
+                        # admitted work drains; an otherwise-idle system
+                        # still admits — same escape hatch as the watermark
+                        if not degraded_stalled:
+                            self.stats.degraded_sheds += 1
+                            degraded_stalled = True
+                        break
+                    # injected phantom pool pressure applies only at NEW
+                    # admissions (never to in-flight growth, which must not
+                    # deadlock) and never gates an otherwise-idle system
+                    phantom = 0
+                    if self.injector.enabled and (self.active or self.swapped):
+                        phantom = self.injector.phantom_free_blocks(
+                            self.stats.steps)
+                    if not self.mem.has_block_headroom(phantom=phantom):
                         # counted once per step, even across shed-replan passes
                         if not admission_stalled:
-                            self.stats.out_of_block_stalls += 1
+                            if phantom and self.mem.has_block_headroom():
+                                self.stats.injected_oob_stalls += 1
+                            else:
+                                self.stats.out_of_block_stalls += 1
                             admission_stalled = True
                         break
                     if not self._watermark_ok():
@@ -700,51 +959,62 @@ class Scheduler:
 
         # preemption/restores only fire with >= 1 surviving decode in the
         # plan, and the stall-shed retry above always converges to a
-        # schedulable prefill — so an empty plan implies no state changed.
+        # schedulable prefill — so an empty plan implies no state changed...
+        # except mid-fault-recovery, where a zero-token pump cycle keeps the
+        # retry/backoff clocks ticking (see _needs_pump)
         if plan.is_empty:
-            return None
+            if not self._needs_pump(plan):
+                return None
+            plan.pump = True
+            self.stats.pump_steps += 1
 
-        # prefetch lookahead: the decode set whose attention follows this
-        # packed compute phase (current decodes + every finishing prefill)
-        ctx = {r: self.requests[r].context_len for r in plan.decode_rids}
-        finishing = []
-        for seg in plan.prefill_segments:
-            if seg.finishes:
-                ctx[seg.rid] = self.requests[seg.rid].total_prefill_len
-                finishing.append(seg.rid)
-        prios = {r: self.requests[r].priority for r in ctx}
-        plan.prefetch = self.planner.plan(ctx, finishing=finishing, priorities=prios)
-        # coverage accounting (vacuous-step bugfix): a plan with zero
-        # plannable bytes contributes nothing to the average instead of a
-        # fake 1.0 — idle/attention-free steps cannot inflate coverage
-        if plan.prefetch.total_tokens == 0:
-            self.stats.prefetch_vacuous_steps += 1
-        else:
-            self.stats.prefetch_steps += 1
-            self.stats.prefetch_coverage_sum += plan.prefetch.coverage
+        if not plan.pump:
+            # prefetch lookahead: the decode set whose attention follows this
+            # packed compute phase (current decodes + every finishing prefill)
+            ctx = {r: self.requests[r].context_len for r in plan.decode_rids}
+            finishing = []
+            for seg in plan.prefill_segments:
+                if seg.finishes:
+                    ctx[seg.rid] = self.requests[seg.rid].total_prefill_len
+                    finishing.append(seg.rid)
+            prios = {r: self.requests[r].priority for r in ctx}
+            plan.prefetch = self.planner.plan(ctx, finishing=finishing,
+                                              priorities=prios)
+            # coverage accounting (vacuous-step bugfix): a plan with zero
+            # plannable bytes contributes nothing to the average instead of a
+            # fake 1.0 — idle/attention-free steps cannot inflate coverage
+            if plan.prefetch.total_tokens == 0:
+                self.stats.prefetch_vacuous_steps += 1
+            else:
+                self.stats.prefetch_steps += 1
+                self.stats.prefetch_coverage_sum += plan.prefetch.coverage
 
-        # ragged-attention accounting: the paged path reads whole blocks up
-        # to each row's own length; the dense gather reads every row padded
-        # to `padded_len` (engine: max_len; sim: the step's longest row)
-        bs = self.mem.block_size
-        decode_lens = [self.requests[r].context_len for r in plan.decode_rids]
-        touched = kv_tokens_touched(decode_lens, bs)  # new token's pos + 1
-        max_row = max(decode_lens, default=1)
-        for seg in plan.prefill_segments:
-            touched += bs * _blocks_prefix_sum(seg.start, seg.start + seg.length, bs)
-            max_row = max(max_row, seg.start + seg.length)
-        rows = len(plan.decode_slots) + plan.total_prefill_tokens
-        self.stats.attn_tokens_touched += touched
-        # baseline at the same block granularity as `touched` (a rectangular
-        # gather over the paged pool reads whole blocks too), so savings are
-        # never negative and sim/engine numbers are comparable
-        pad = self.padded_len if self.padded_len is not None else max_row
-        self.stats.attn_tokens_padded += rows * (bs * -(-pad // bs))
+            # ragged-attention accounting: the paged path reads whole blocks
+            # up to each row's own length; the dense gather reads every row
+            # padded to `padded_len` (engine: max_len; sim: longest row)
+            bs = self.mem.block_size
+            decode_lens = [self.requests[r].context_len
+                           for r in plan.decode_rids]
+            touched = kv_tokens_touched(decode_lens, bs)  # new token's pos + 1
+            max_row = max(decode_lens, default=1)
+            for seg in plan.prefill_segments:
+                touched += bs * _blocks_prefix_sum(
+                    seg.start, seg.start + seg.length, bs)
+                max_row = max(max_row, seg.start + seg.length)
+            rows = len(plan.decode_slots) + plan.total_prefill_tokens
+            self.stats.attn_tokens_touched += touched
+            # baseline at the same block granularity as `touched` (a
+            # rectangular gather over the paged pool reads whole blocks
+            # too), so savings are never negative and sim/engine comparable
+            pad = self.padded_len if self.padded_len is not None else max_row
+            self.stats.attn_tokens_padded += rows * (bs * -(-pad // bs))
 
         # one-step-ahead transfer intents: issued against the ledger while
         # THIS step's compute runs, consumed by the next step's restores /
-        # adoptions (still pre-increment: issue_step == this plan's index)
-        if self.cfg.async_prefetch:
+        # adoptions (still pre-increment: issue_step == this plan's index).
+        # Degraded mode turns the lookahead off — no speculative transfers
+        # to fail while the failure rate is hot; restores go synchronous.
+        if self.cfg.async_prefetch and not self._degraded_now():
             self._plan_ahead(plan)
 
         # canonical schedule-determined step record: the same Scheduler
@@ -764,6 +1034,8 @@ class Scheduler:
                              for t in plan.issued),
                 consumed=tuple((r.rid, r.kind, int(round(r.nbytes)))
                                for r in plan.consumed),
+                retried=tuple((t.rid, t.kind, t.attempt)
+                              for t in plan.retried),
             )
 
         self.stats.steps += 1
@@ -797,6 +1069,10 @@ class Scheduler:
                     >= self.requests[rid].max_new_tokens))
             slots = max(1, len(self.free_slots) + freeing)
             for req in self.swapped[:slots]:
+                # a pending aborted record means the restore gate will fall
+                # back to recompute — a fresh intent would only dangle
+                if q.has_aborted(req.rid, SWAP_IN):
+                    continue
                 t = q.issue(req.rid, SWAP_IN,
                             self.mem.swap_host_bytes(req.rid), step)
                 if t is not None and t.issue_step == step:

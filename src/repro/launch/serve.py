@@ -13,6 +13,8 @@ overrides the computed size explicitly.
 from __future__ import annotations
 
 import argparse
+import signal
+import sys
 
 import jax
 import numpy as np
@@ -28,7 +30,7 @@ from repro.obs.trace import TraceRecorder
 from repro.obs.perfetto import dump_json, export_chrome
 from repro.serving.engine import Engine
 from repro.serving.metrics import summarize
-from repro.serving.request import Request
+from repro.serving.request import Request, State
 from repro.serving.workload import shared_prefix_requests
 from repro.sim.hardware import HARDWARE
 
@@ -99,6 +101,27 @@ def main():
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="dump the full metrics summary as NaN-safe JSON "
                          "(non-finite values serialize as null)")
+    # robustness layer (docs/robustness.md)
+    ap.add_argument("--fault-plan", default=None, metavar="PATH",
+                    help="JSON FaultPlan to inject deterministic transfer "
+                         "chaos (see repro.robustness.FaultPlan)")
+    ap.add_argument("--fail-rate", type=float, default=0.0,
+                    help="per-attempt transfer failure probability (builds "
+                         "an ad-hoc FaultPlan; ignored with --fault-plan)")
+    ap.add_argument("--delay-rate", type=float, default=0.0,
+                    help="per-attempt transfer delay probability")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic fault schedule")
+    ap.add_argument("--max-transfer-retries", type=int, default=3,
+                    help="failed-transfer retry budget before the swap-in "
+                         "falls back to recompute")
+    ap.add_argument("--request-timeout", type=float, default=None,
+                    help="per-request deadline in engine steps after "
+                         "arrival; expired requests are cancelled cleanly")
+    ap.add_argument("--degraded-threshold", type=float, default=None,
+                    help="rolling transfer-failure rate that trips degraded "
+                         "mode (async prefetch off, admissions shed) until "
+                         "the rate recovers")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -112,6 +135,14 @@ def main():
     if pool is None and supports_packed(cfg) and args.attn_kernel != "dense":
         pool, pool_basis = sized_kv_pool(cfg, args.hw, args.max_batch,
                                          args.max_len, args.kv_block)
+    fault_plan = None
+    if args.fault_plan:
+        from repro.robustness import FaultPlan
+        fault_plan = FaultPlan.load(args.fault_plan)
+    elif args.fail_rate > 0 or args.delay_rate > 0:
+        from repro.robustness import FaultPlan
+        fault_plan = FaultPlan(seed=args.fault_seed, fail_rate=args.fail_rate,
+                               delay_rate=args.delay_rate)
     tracer = TraceRecorder("engine") if args.trace_out else None
     eng = Engine(model, params, SchedulerConfig(
         chunk_size=args.chunk, max_decode_batch=args.max_batch,
@@ -121,7 +152,11 @@ def main():
         kv_block_size=args.kv_block, num_kv_blocks=pool,
         enable_prefix_cache=args.prefix_cache,
         admission_watermark=args.admission_watermark,
-        async_prefetch=not args.no_async_prefetch),
+        async_prefetch=not args.no_async_prefetch,
+        fault_plan=fault_plan,
+        max_transfer_retries=args.max_transfer_retries,
+        request_timeout=args.request_timeout,
+        degraded_threshold=args.degraded_threshold),
         max_len=args.max_len, attn_kernel=args.attn_kernel, tracer=tracer)
     rng = np.random.default_rng(0)
     if args.shared_prefix > 0:
@@ -136,7 +171,29 @@ def main():
             eng.submit(Request(rid=rid,
                                prompt=rng.integers(0, cfg.vocab_size, L).tolist(),
                                max_new_tokens=args.max_new))
-    eng.run(max_steps=5000)
+    # graceful shutdown: SIGTERM behaves like ^C — the run loop unwinds,
+    # in-flight requests are cancelled cleanly (allocator/ledger/host-tier
+    # state released), and the trace/metrics artifacts below still flush
+    def _on_sigterm(signum, frame):
+        raise KeyboardInterrupt
+
+    prev_handler = signal.signal(signal.SIGTERM, _on_sigterm)
+    interrupted = False
+    try:
+        eng.run(max_steps=5000)
+        if eng.scheduler.has_work:
+            # step budget exhausted with work left: cancel the remainder so
+            # the trace/ledger flush in a fully terminal state
+            n = eng.shutdown("truncated")
+            print(f"[launch.serve] step budget exhausted: cancelled {n} "
+                  "unfinished request(s)", file=sys.stderr)
+    except KeyboardInterrupt:
+        interrupted = True
+        n = eng.shutdown("interrupt")
+        print(f"[launch.serve] interrupted: cancelled {n} in-flight "
+              "request(s), flushing artifacts", file=sys.stderr)
+    finally:
+        signal.signal(signal.SIGTERM, prev_handler)
     reg = MetricsRegistry()
     eng.register_metrics(reg)
     m = summarize(eng.scheduler.requests.values(), horizon=float(max(eng.steps_run, 1)),
@@ -179,6 +236,14 @@ def main():
           f"overlapped={m['bytes_overlapped']:.0f}B "
           f"overlap_eff={m['overlap_efficiency']:.2f} "
           f"async={'off' if args.no_async_prefetch else 'on'}")
+    unfinished = sorted(r.rid for r in eng.scheduler.requests.values()
+                        if r.state is not State.DONE)
+    if unfinished or interrupted:
+        print(f"[launch.serve] exiting nonzero: {len(unfinished)} "
+              f"unfinished request(s) {unfinished[:16]}"
+              f"{'...' if len(unfinished) > 16 else ''}"
+              f"{' (interrupted)' if interrupted else ''}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -261,9 +261,12 @@ class KVMemoryManager:
         slack = t.slack_tokens(self.block_size) if t is not None else 0
         return free * self.block_size + slack
 
-    def has_block_headroom(self) -> bool:
+    def has_block_headroom(self, phantom: int = 0) -> bool:
+        """``phantom`` free blocks are discounted before the check — the
+        fault injector's spurious-OutOfBlocks pressure (admission-gate only;
+        in-flight growth never sees it, so nothing admitted can deadlock)."""
         free = self.effective_free_blocks()
-        return free is None or free > 0
+        return free is None or free - phantom > 0
 
     # ---------------------------------------------------------- prefix cache
     def _reclaim_for(self, need_blocks: int) -> bool:

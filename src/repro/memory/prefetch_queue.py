@@ -10,6 +10,10 @@ BEOL warm-up, a BEOL fill — is tracked through an explicit lifecycle::
     free -> issued -> in-flight -> landed -> (consumed == readable)
                         |
                         +-> cancelled (intent never materialized)
+                        |
+                        +-> failed -> retried -> issued   (fault injection:
+                              |        bounded retries w/ exponential backoff)
+                              +-> cancelled("retries_exhausted")
 
 Invariants the rest of the stack relies on:
 
@@ -29,6 +33,16 @@ The queue itself has no clock.  The simulator advances in-flight transfers
 with ``progress(budget_bytes)`` (residual host-link bandwidth earned during
 each step's wall time); the engine calls ``land()`` when its staged copy has
 actually been dispatched to the device.
+
+Fault injection (``repro.robustness``) threads through the same ledger: a
+``FaultInjector`` deals a per-attempt verdict (ok / fail / delay) when an
+attempt starts, and the queue executes it — a failed attempt resets the
+transfer's bytes, backs off ``RetryPolicy.backoff(attempt)`` steps, and
+re-enters ISSUED via ``retry_tick``; a transfer that exhausts its retry
+budget is aborted (terminal CANCELLED with reason ``"retries_exhausted"``,
+surfaced to the scheduler through ``take_aborted`` so the consumer can fall
+back, e.g. swap restore -> recompute).  With the injector disabled every
+fault path is dead code and the ledger behaves exactly as before.
 """
 from __future__ import annotations
 
@@ -47,6 +61,7 @@ IN_FLIGHT = "in_flight"  # some bytes moved, not all
 LANDED = "landed"  # every byte on the destination tier: readable
 CONSUMED = "consumed"  # a step read the pages (terminal)
 CANCELLED = "cancelled"  # intent never materialized (terminal)
+FAILED = "failed"  # attempt failed (injected); waiting out retry backoff
 
 
 @dataclasses.dataclass
@@ -61,9 +76,18 @@ class PrefetchTransfer:
     state: str = ISSUED
     remaining: float = 0.0  # bytes not yet landed
     consume_step: Optional[int] = None
+    # fault-injection bookkeeping (inert unless an injector is attached)
+    attempt: int = 0  # 0-based attempt index; bumps on each retry
+    attempt_step: int = 0  # step the current attempt started on
+    ready_step: int = 0  # earliest step this attempt may move/land (delay/backoff)
+    fault: Optional[object] = None  # FaultSpec dealt to the current attempt
+    deferred: bool = False  # engine saw a delay verdict; re-attempt via retry_tick
+    cancel_reason: Optional[str] = None
 
     def __post_init__(self):
         self.remaining = float(self.nbytes)
+        self.attempt_step = self.issue_step
+        self.ready_step = self.issue_step
 
     @property
     def landed(self) -> bool:
@@ -71,7 +95,7 @@ class PrefetchTransfer:
 
     @property
     def live(self) -> bool:
-        return self.state in (ISSUED, IN_FLIGHT, LANDED)
+        return self.state in (ISSUED, IN_FLIGHT, LANDED, FAILED)
 
 
 @dataclasses.dataclass
@@ -110,6 +134,11 @@ class PrefetchQueueStats:
     bytes_sync: float = 0.0  # never issued ahead: fully synchronous
     bytes_cancelled: float = 0.0  # intents that never found a consumer
     stall_s: float = 0.0  # simulator-accumulated stall time
+    # fault-injection / recovery counters (zero without an injector)
+    transfer_failures: int = 0  # attempts dealt a fail verdict
+    transfer_retries: int = 0  # failed attempts that re-entered ISSUED
+    transfers_aborted: int = 0  # transfers cancelled after exhausting retries
+    bytes_refetched: float = 0.0  # bytes re-sent because an attempt failed
 
     def overlap_efficiency(self) -> float:
         """Fraction of needed transfer bytes hidden under earlier compute.
@@ -146,6 +175,18 @@ class PrefetchQueueStats:
         reg.gauge("overlap_efficiency", "ratio",
                   "fraction of needed transfer bytes hidden under earlier "
                   "compute").set(self.overlap_efficiency())
+        reg.counter("retry_count", "events",
+                    "failed transfer attempts retried after backoff").inc(
+                        float(self.transfer_retries))
+        reg.counter("transfer_failures", "events",
+                    "transfer attempts that failed (fault injection)").inc(
+                        float(self.transfer_failures))
+        reg.counter("transfers_aborted", "events",
+                    "transfers cancelled after exhausting their retry "
+                    "budget").inc(float(self.transfers_aborted))
+        reg.counter("bytes_refetched", "bytes",
+                    "bytes re-sent across the host link due to failed "
+                    "attempts").inc(float(self.bytes_refetched))
 
 
 class PrefetchQueue:
@@ -157,15 +198,24 @@ class PrefetchQueue:
     Perfetto export shows and ``tools/check_trace.py`` checks the
     consumed-only-after-landed invariant against."""
 
-    def __init__(self, tracer=None):
+    def __init__(self, tracer=None, injector=None, retry=None):
         self._next_tid = 0
         self.transfers: List[PrefetchTransfer] = []  # issue order
         self._live: Dict[Tuple[int, str], PrefetchTransfer] = {}
+        self._aborted: Dict[Tuple[int, str], str] = {}  # retries exhausted
         self.stats = PrefetchQueueStats()
         if tracer is None:
             from repro.obs.trace import NOOP
             tracer = NOOP
         self.trace = tracer
+        if injector is None:
+            from repro.robustness.faults import NO_FAULTS
+            injector = NO_FAULTS
+        if retry is None:
+            from repro.robustness.faults import RetryPolicy
+            retry = RetryPolicy()
+        self.injector = injector
+        self.retry = retry
 
     # ------------------------------------------------------------------ issue
     def pending(self, rid: int, kind: str) -> Optional[PrefetchTransfer]:
@@ -190,17 +240,40 @@ class PrefetchQueue:
         self._live[(rid, kind)] = t
         self.stats.issued += 1
         self.stats.bytes_issued += t.nbytes
+        if self.injector.enabled:
+            self._deal(t, step)
         if self.trace.enabled:
             self.trace.transfer_event(t.tid, rid, kind, ISSUED, t.nbytes,
                                       issue_step=step)
         return t
 
+    def _deal(self, t: PrefetchTransfer, step: int) -> None:
+        """Draw the fault verdict for the attempt that starts now.  A delay
+        verdict pushes ``ready_step`` out; a fail verdict is held on the
+        transfer and *executed at the next step boundary* by ``retry_tick``
+        — schedule-determined, so engine and sim register the same failure
+        at the same step."""
+        from repro.robustness.faults import VERDICT_DELAY
+        t.fault = self.injector.attempt(t.tid, t.rid, t.kind, t.attempt, step)
+        t.attempt_step = step
+        t.ready_step = step
+        if t.fault is not None and t.fault.verdict == VERDICT_DELAY:
+            t.ready_step = step + max(1, t.fault.delay_steps)
+
+    @staticmethod
+    def _doomed(t: PrefetchTransfer) -> bool:
+        return t.fault is not None and getattr(t.fault, "verdict", None) == "fail"
+
     # --------------------------------------------------------------- movement
-    def progress(self, budget_bytes: float) -> float:
+    def progress(self, budget_bytes: float, step: Optional[int] = None) -> float:
         """Advance in-flight transfers oldest-first with ``budget_bytes`` of
         link capacity (the simulator's residual bandwidth earned during one
         step's wall time).  Returns the bytes actually moved.  Transfers
-        whose remaining bytes reach zero become LANDED (readable)."""
+        whose remaining bytes reach zero become LANDED (readable) — unless
+        the current attempt was dealt a fail verdict, in which case the
+        bytes are wasted and the transfer enters retry backoff.  ``step``
+        (the scheduler step the budget was earned in) gates delayed
+        attempts; None skips all fault gating."""
         moved = 0.0
         budget = float(budget_bytes)
         for t in self.transfers:
@@ -208,6 +281,10 @@ class PrefetchQueue:
                 break
             if t.state not in (ISSUED, IN_FLIGHT):
                 continue
+            if step is not None and step < t.ready_step:
+                continue  # delay verdict / backoff: attempt not started yet
+            if step is not None and self._doomed(t):
+                continue  # doomed attempt: retry_tick executes the failure
             take = min(budget, t.remaining)
             t.remaining -= take
             budget -= take
@@ -227,6 +304,126 @@ class PrefetchQueue:
         t.state = LANDED
         if self.trace.enabled and not already:
             self.trace.transfer_event(t.tid, t.rid, t.kind, LANDED, t.nbytes)
+
+    def attempt_land(self, t: PrefetchTransfer, step: int) -> bool:
+        """The engine's fault-aware ``land``: consult the verdict dealt to
+        the current attempt before dispatching the staged copy.  Returns
+        True iff the transfer is LANDED after the call.  A delay verdict
+        defers the attempt (``retry_tick`` re-surfaces it once
+        ``ready_step`` arrives); a fail verdict leaves the transfer
+        un-landed — ``retry_tick`` executes the failure at the next step
+        boundary, identically in both backends."""
+        if not self.injector.enabled:
+            self.land(t)
+            return True
+        if t.state not in (ISSUED, IN_FLIGHT):
+            return t.state == LANDED
+        if step < t.ready_step:
+            t.deferred = True
+            return False
+        if self._doomed(t):
+            return False
+        self.land(t)
+        return True
+
+    def _fail(self, t: PrefetchTransfer, step: int) -> None:
+        """Execute a fail verdict on the current attempt: bytes already
+        moved are wasted (``bytes_refetched``); the transfer either backs
+        off for a retry or — once the budget is spent — aborts into a
+        terminal CANCELLED the consumer discovers via ``take_aborted``."""
+        self.stats.transfer_failures += 1
+        self.stats.bytes_refetched += float(t.nbytes)
+        t.remaining = float(t.nbytes)
+        t.deferred = False
+        if self.trace.enabled:
+            self.trace.transfer_event(t.tid, t.rid, t.kind, FAILED, t.nbytes,
+                                      attempt=t.attempt)
+        if t.attempt >= self.retry.max_retries:
+            self._live.pop((t.rid, t.kind), None)
+            t.state = CANCELLED
+            t.cancel_reason = "retries_exhausted"
+            self._aborted[(t.rid, t.kind)] = t.cancel_reason
+            self.stats.transfers_aborted += 1
+            self.stats.cancelled += 1
+            self.stats.bytes_cancelled += t.nbytes
+            if self.trace.enabled:
+                self.trace.transfer_event(t.tid, t.rid, t.kind, CANCELLED,
+                                          t.nbytes, reason=t.cancel_reason)
+        else:
+            t.state = FAILED
+            t.ready_step = step + self.retry.backoff(t.attempt)
+
+    def retry_tick(self, step: int) -> List[PrefetchTransfer]:
+        """Pump the fault/retry state machine at the top of a scheduler
+        step.  Three schedule-determined transitions, in order:
+
+        1. attempts dealt a fail verdict that have had their step on the
+           link *fail now* (backoff or terminal abort via ``_fail``);
+        2. FAILED transfers whose backoff expired re-enter ISSUED with a
+           fresh verdict for the next attempt;
+        3. engine-deferred delayed attempts whose ``ready_step`` arrived
+           are re-surfaced.
+
+        Returns the transfers the engine must re-attempt this step
+        (``StepPlan.retried``).  Because this runs inside the shared
+        ``Scheduler.next_step``, failures/retries/aborts register at the
+        same step index in the engine and the sim."""
+        out: List[PrefetchTransfer] = []
+        for t in list(self._live.values()):
+            if t.state in (ISSUED, IN_FLIGHT) and self._doomed(t) \
+                    and step > t.attempt_step:
+                self._fail(t, step)
+        for t in list(self._live.values()):
+            if t.state == FAILED and t.ready_step <= step:
+                t.attempt += 1
+                t.state = ISSUED
+                t.remaining = float(t.nbytes)
+                self._deal(t, step)
+                self.stats.transfer_retries += 1
+                if self.trace.enabled:
+                    self.trace.transfer_event(t.tid, t.rid, t.kind, "retried",
+                                              t.nbytes, attempt=t.attempt)
+                out.append(t)
+            elif t.state == ISSUED and t.deferred and t.ready_step <= step:
+                t.deferred = False
+                out.append(t)
+        return out
+
+    def blocked(self, rid: int, kind: str = SWAP_IN) -> bool:
+        """Is the outstanding transfer for (rid, kind) mid-recovery?  True
+        while it sits out a retry backoff (FAILED) and while a retried
+        attempt is back on the link but not landed — the consumer parks
+        instead of consuming, so the retry overlaps other work and the
+        issued→failed→retried→landed lifecycle completes; consuming early
+        would charge a full sync fetch for bytes the retry delivers."""
+        t = self._live.get((rid, kind))
+        if t is None:
+            return False
+        if t.state == FAILED:
+            return True
+        return t.attempt > 0 and t.state in (ISSUED, IN_FLIGHT)
+
+    def actionable_bytes(self, step: int) -> float:
+        """Bytes the link could move at ``step``: in-flight remainders whose
+        attempt has started and is not fail-doomed.  The sim's pump steps
+        stall exactly this long (at degraded bandwidth) to land retries."""
+        total = 0.0
+        for t in self._live.values():
+            if t.state not in (ISSUED, IN_FLIGHT):
+                continue
+            if step < t.ready_step or self._doomed(t):
+                continue
+            total += t.remaining
+        return total
+
+    def has_aborted(self, rid: int, kind: str = SWAP_IN) -> bool:
+        return (rid, kind) in self._aborted
+
+    def take_aborted(self, rid: int, kind: str = SWAP_IN) -> Optional[str]:
+        """Pop and return the abort reason for (rid, kind), if its transfer
+        exhausted the retry budget.  One-shot: the consumer that takes it
+        owns the fallback."""
+        return self._aborted.pop((rid, kind), None)
 
     # ---------------------------------------------------------------- reading
     def readable(self, rid: int, kind: str = SWAP_IN) -> bool:
@@ -283,18 +480,31 @@ class PrefetchQueue:
                                       sync=False)
         return rec
 
-    def cancel(self, rid: int, kind: str) -> float:
+    def cancel(self, rid: int, kind: str, reason: Optional[str] = None) -> float:
         """Retire an intent whose consumer will never come (e.g. the request
-        finished while parked).  Returns the cancelled bytes."""
+        finished while parked, or was cancelled).  Returns the cancelled
+        bytes.  ``reason`` is recorded on the transfer and in the trace."""
         t = self._live.pop((rid, kind), None)
         if t is None:
             return 0.0
         t.state = CANCELLED
+        t.cancel_reason = reason
         self.stats.cancelled += 1
         self.stats.bytes_cancelled += t.nbytes
         if self.trace.enabled:
-            self.trace.transfer_event(t.tid, rid, kind, CANCELLED, t.nbytes)
+            args = {"reason": reason} if reason else {}
+            self.trace.transfer_event(t.tid, rid, kind, CANCELLED, t.nbytes,
+                                      **args)
         return t.nbytes
+
+    def cancel_outstanding(self, reason: str = "shutdown") -> int:
+        """Cancel every live intent (engine shutdown / interrupt): leaves
+        the ledger fully terminal so a flushed trace passes the lifecycle
+        checker.  Returns the number of intents cancelled."""
+        keys = list(self._live)
+        for rid, kind in keys:
+            self.cancel(rid, kind, reason=reason)
+        return len(keys)
 
     # ------------------------------------------------------------- accounting
     def note_fill(self, earned_bytes: float, shortfall_bytes: float) -> None:
@@ -311,3 +521,13 @@ class PrefetchQueue:
     def in_flight_bytes(self) -> float:
         return sum(t.remaining for t in self._live.values()
                    if t.state in (ISSUED, IN_FLIGHT))
+
+    def outstanding(self) -> int:
+        """Number of non-terminal ledger entries (the dangling-entry check
+        in the chaos property harness: must be 0 after a drained run)."""
+        return len(self._live)
+
+    def fully_terminal(self) -> bool:
+        """True iff every transfer ever issued reached CONSUMED or
+        CANCELLED — the clean-ledger half of the headline invariant."""
+        return all(t.state in (CONSUMED, CANCELLED) for t in self.transfers)

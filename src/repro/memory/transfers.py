@@ -84,13 +84,17 @@ class TransferEngine:
         return plan
 
     def price(self, dma: DMAPlan, stage_time: float,
-              stage_hbm_bytes: float) -> DMAReport:
+              stage_hbm_bytes: float, host_bw_scale: float = 1.0) -> DMAReport:
+        """``host_bw_scale`` < 1 models a transient host-link bandwidth
+        collapse (robustness fault windows): swap traffic takes
+        proportionally longer while HBM streaming is unaffected."""
         slack_time = max(0.0, stage_time - stage_hbm_bytes / self.hbm_stream_bw)
         fill = dma.fill_bytes
         earned = min(fill, slack_time * self.hbm_stream_bw)
         fill_time = earned / self.hbm_stream_bw if earned else 0.0
         swap = dma.swap_bytes
-        swap_time = swap / self.host_bw if swap else 0.0
+        host_bw = self.host_bw * max(1e-9, host_bw_scale)
+        swap_time = swap / host_bw if swap else 0.0
         swap_hidden = min(swap_time, max(0.0, slack_time - fill_time))
         return DMAReport(
             earned_fill_bytes=earned,

@@ -67,7 +67,9 @@ PIPELINE_LANES = (
 # request lifecycle transitions -> the state span they open (None = closed).
 # "first_token" and "prefill_done" both enter decode: the former fires only
 # when the token is the request's first ever (TTFT edge), the latter on
-# re-prefills after a recompute preemption.
+# re-prefills after a recompute preemption.  "fallback" is the robustness
+# layer's swap->recompute downgrade (back to queued, re-prefills later);
+# "cancel" is terminal like finish (deadline kill / shutdown).
 REQ_TRANSITIONS: Dict[str, Optional[str]] = {
     "arrival": "queued",
     "admit": "prefill",
@@ -76,7 +78,9 @@ REQ_TRANSITIONS: Dict[str, Optional[str]] = {
     "preempt": "queued",
     "swap_out": "swapped",
     "swap_in": "decode",
+    "fallback": "queued",
     "finish": None,
+    "cancel": None,
 }
 
 
@@ -181,12 +185,18 @@ class TraceRecorder:
     # ------------------------------------------------- scheduler-facing hooks
     def sched_step(self, step: int, decode: tuple, prefill: tuple,
                    preempted: tuple, swap_out: tuple, swap_in: tuple,
-                   issued: tuple, consumed: tuple) -> None:
+                   issued: tuple, consumed: tuple,
+                   retried: tuple = ()) -> None:
         """The canonical schedule-determined record of one StepPlan.  The
         tuple is the *identity* of the step: two backends that executed the
-        same schedule emit byte-for-byte equal keys in the same order."""
+        same schedule emit byte-for-byte equal keys in the same order.
+        ``retried`` (fault-injection re-attempts) extends the key only when
+        non-empty, so fault-free traces are byte-identical to builds that
+        predate the robustness layer."""
         key = ("step", step, decode, prefill, preempted, swap_out, swap_in,
                issued, consumed)
+        if retried:
+            key = key + (retried,)
         self.instant(LANE_SCHED, f"plan {step}", step=step, sched=key,
                      decodes=len(decode), prefill_tokens=sum(s[2] for s in prefill),
                      preempted=len(preempted), issued=len(issued),

@@ -302,6 +302,24 @@ class Engine:
             if self.step(now=float(self.steps_run)) is None:
                 break
 
+    def shutdown(self, reason: str = "shutdown") -> int:
+        """Graceful teardown (KeyboardInterrupt/SIGTERM in launch.serve):
+        cancel every non-terminal request, purge their host-tier state, and
+        cancel outstanding ledger intents so a flushed trace is fully
+        terminal.  Returns the number of requests cancelled."""
+        n = self.scheduler.cancel_all(reason, now=float(self.steps_run))
+        self._purge_released()
+        self.scheduler.prefetch_queue.cancel_outstanding(reason)
+        return n
+
+    def _purge_released(self) -> None:
+        """Drop host swap copies and staged device buffers of requests the
+        scheduler released (cancellations, swap->recompute fallbacks) — the
+        engine-side half of clean cancellation."""
+        for rid, _reason in self.scheduler.drain_released():
+            self.swap_store.pop(rid, None)
+            self._staged.pop(rid, None)
+
     def register_metrics(self, reg) -> None:
         """Engine-side gauges for the typed metrics registry: step count,
         host-tier occupancy, and (paged mode) pool capacity/peak pressure."""
@@ -317,12 +335,15 @@ class Engine:
             reg.gauge("kv_pool_peak_used", "pages",
                       "peak pages simultaneously allocated").set(
                           float(self.scheduler.mem.allocator.peak_used_blocks))
+        if self.scheduler.injector.enabled:
+            self.scheduler.injector.register_metrics(reg)
 
     # ----------------------------------------------------------------- steps
     def step(self, now: float = 0.0) -> Optional[StepPlan]:
         tr = self.trace
         t0 = tr.now() if tr.enabled else 0.0
         plan = self.scheduler.next_step(now)
+        self._purge_released()  # even a None plan may have cancelled requests
         if plan is None:
             return None
         if plan.prefetch is not None:
@@ -474,18 +495,29 @@ class Engine:
         the matched radix blocks are already device-resident pages — no
         bytes cross a link, the intent lands immediately. Either way the
         transfer is LANDED before any later step may consume it, so the
-        readable() invariant holds by construction on the engine."""
+        readable() invariant holds by construction on the engine.
+
+        Under fault injection ``attempt_land`` arbitrates: a doomed or
+        delayed attempt does NOT land (its staged copy — the half-finished
+        DMA — is dropped), and the shared retry clock re-surfaces the
+        transfer in a later plan's ``retried`` list, where this same loop
+        re-stages it from the still-intact host copy."""
         q = self.scheduler.prefetch_queue
-        for t in plan.issued:
+        for t in list(plan.issued) + list(plan.retried):
             if t.kind == SWAP_IN:
                 entry = self.swap_store.get(t.rid)
                 if entry is None:
                     continue  # intent outlived the store (defensive)
+                if not q.attempt_land(t, plan.step):
+                    # injected failure or delay: the transfer stays in the
+                    # ledger; whatever staging a prior attempt did is torn
+                    # down so the retry re-copies from the host tier
+                    self._staged.pop(t.rid, None)
+                    continue
                 if t.rid not in self._staged:
                     if self.attn_kernel == "paged":
                         saved, idx = entry["kv"], entry["idx"]
                         if saved is None:
-                            q.land(t)
                             continue  # fully shared table: nothing to move
                         n = len(idx)
                         m = _page_bucket(n)
@@ -504,9 +536,8 @@ class Engine:
                         self._staged[t.rid] = jax.tree.map(jnp.asarray, saved)
                     else:
                         self._staged[t.rid] = jax.tree.map(jnp.asarray, entry)
-                q.land(t)
             elif t.kind == ADOPT:
-                q.land(t)
+                q.attempt_land(t, plan.step)
 
     def _verify_landed(self, plan: StepPlan) -> None:
         """Guard before attention reads the mirror: no request this step

@@ -12,6 +12,11 @@ class State(enum.Enum):
     DECODE = "decode"
     SWAPPED = "swapped"  # KV spilled to host DRAM, awaiting re-admission
     DONE = "done"
+    # terminal without completing: deadline expired or engine shut down.
+    # Everything the request held (slot, allocator refs, prefix-cache refs,
+    # ledger intents, host swap records) is released at cancellation;
+    # finish_time stays None so it never counts as a completed request.
+    CANCELLED = "cancelled"
 
 
 @dataclasses.dataclass
@@ -22,6 +27,10 @@ class Request:
     arrival_time: float = 0.0
     priority: int = 0  # higher = more important (admission + preemption victim order)
     frames: Optional[Any] = None  # audio frontend stub embeddings (enc-dec archs)
+    # absolute deadline on the driving clock (engine: steps, sim: seconds);
+    # None = no deadline. SchedulerConfig.request_timeout (relative to
+    # arrival) composes with this — the earlier of the two wins.
+    deadline: Optional[float] = None
 
     state: State = State.QUEUED
     slot: Optional[int] = None
@@ -42,6 +51,9 @@ class Request:
     # prompt tokens adopted from the radix prefix cache at the most recent
     # admission (copy-on-write shared pages; prefill skips them entirely)
     cached_prefix_len: int = 0
+    # why the request was cancelled ("deadline", "shutdown", ...); None
+    # unless state is CANCELLED
+    cancel_reason: Optional[str] = None
 
     # timing (engine: wall clock; sim: simulated seconds)
     schedule_time: Optional[float] = None  # first time any chunk ran

@@ -130,6 +130,13 @@ def simulate_service(
     # previous step computes land out of leftover host bandwidth; False =
     # the fully synchronous PR 2 pricing (serial overlap baseline)
     async_prefetch: bool = True,
+    # robustness layer (PR 8): deterministic transfer chaos + degradation
+    fault_plan=None,  # a repro.robustness.FaultPlan, or None
+    max_transfer_retries: int = 3,
+    retry_backoff_steps: int = 1,
+    request_timeout: Optional[float] = None,  # seconds after arrival
+    degraded_threshold: Optional[float] = None,
+    degraded_window: int = 16,
     requests=None,  # explicit request list overrides workload sampling —
     # lets benchmarks drive the sim and the real engine over the SAME
     # shared-prefix requests so their schedules (and savings) coincide
@@ -155,7 +162,13 @@ def simulate_service(
                         enable_prefix_cache=enable_prefix_cache,
                         prefix_cache_blocks=prefix_cache_blocks,
                         admission_watermark=admission_watermark,
-                        async_prefetch=async_prefetch),
+                        async_prefetch=async_prefetch,
+                        fault_plan=fault_plan,
+                        max_transfer_retries=max_transfer_retries,
+                        retry_backoff_steps=retry_backoff_steps,
+                        request_timeout=request_timeout,
+                        degraded_threshold=degraded_threshold,
+                        degraded_window=degraded_window),
         cfg,
         tracer=tr,
     )
@@ -189,6 +202,34 @@ def simulate_service(
             if ai >= len(reqs):
                 break
             t = max(t, reqs[ai].arrival_time)
+            continue
+        # transient host-link bandwidth collapse (fault windows) scales every
+        # host transfer this step — same ledger states, just slower links
+        bwf = (sched.injector.host_bw_factor(plan.step)
+               if sched.injector.enabled else 1.0)
+        host_bw_eff = dma.host_bw * max(1e-9, bwf)
+        if plan.pump:
+            # zero-token retry-pump step: no compute ran, the wall time is
+            # whatever the (possibly collapsed) host link needs to land the
+            # actionable retried/deferred bytes — the sim prices the same
+            # stall the engine pays by running a zero-row forward and
+            # waiting for its ledger
+            pending_b = queue.actionable_bytes(plan.step)
+            dt = pending_b / host_bw_eff if pending_b else 0.0
+            queue.stats.stall_s += dt
+            t0, t = t, t + dt
+            tr.set_time(t)
+            queue.progress(pending_b, step=plan.step)
+            if tr.enabled:
+                tr.span(LANE_STEP, f"step {steps}", t0, dt, step=steps,
+                        tokens=0, decodes=0, prefill_tokens=0, pump=True)
+                if pending_b > 0:
+                    tr.span(LANE_HOST_LINK, "kv dma (retry pump)", t0, dt,
+                            step=steps, bytes=pending_b)
+            serial_s += dt
+            overlap_bound_s += dt
+            sched.complete_step(plan, now=t)
+            steps += 1
             continue
         pf = plan.prefetch
         retained = float(pf.retained_bytes) if pf else 0.0
@@ -228,7 +269,8 @@ def simulate_service(
                            if r.kind == PF_SWAP_IN and r.issued_ahead)
         swap_in_demand = sum(r.nbytes for r in plan.consumed
                              if r.kind == PF_SWAP_IN)
-        report = dma.price(dma.build(fill, swap_out_b, swap_in_sync), step_t, step_hbm)
+        report = dma.price(dma.build(fill, swap_out_b, swap_in_sync), step_t,
+                           step_hbm, host_bw_scale=bwf)
         if report.fill_shortfall_bytes > 0:
             # the slack couldn't earn the whole fill: reprice the step at
             # what landed, then re-derive the DMA report against the
@@ -240,10 +282,10 @@ def simulate_service(
                 kv_d, buffer=retained + report.earned_fill_bytes)
             report = dma.price(
                 dma.build(report.earned_fill_bytes, swap_out_b, swap_in_sync),
-                step_t, step_hbm)
+                step_t, step_hbm, host_bw_scale=bwf)
         sched.commit_prefetch(plan, earned_fill_bytes=report.earned_fill_bytes)
         queue.note_fill(report.earned_fill_bytes, report.fill_shortfall_bytes)
-        prefetch_stall = swap_in_late / dma.host_bw
+        prefetch_stall = swap_in_late / host_bw_eff
         queue.stats.stall_s += prefetch_stall
         dt = step_t + report.stall_time + prefetch_stall
         t0, t = t, t + dt
@@ -252,7 +294,8 @@ def simulate_service(
         # step's wall time advances issued-ahead transfers oldest-first —
         # the DMA the engine overlaps by staging under in-flight compute
         sync_host_b = swap_out_b + swap_in_sync + swap_in_late
-        progressed = queue.progress(max(0.0, dt * dma.host_bw - sync_host_b))
+        progressed = queue.progress(
+            max(0.0, dt * host_bw_eff - sync_host_b), step=plan.step)
         if tr.enabled:
             # step phase spans laid out contiguously inside [t0, t0+dt]:
             # compute, then the sync-transfer stall, then the late-prefetch
@@ -274,7 +317,7 @@ def simulate_service(
             host_b = sync_host_b + progressed
             if host_b > 0:
                 tr.span(LANE_HOST_LINK, "kv dma", t0,
-                        min(dt, host_b / dma.host_bw), step=steps,
+                        min(dt, host_b / host_bw_eff), step=steps,
                         bytes=host_b)
             if report.earned_fill_bytes > 0:
                 tr.span(LANE_HBM_FILL, "beol fill", t0,
@@ -336,6 +379,8 @@ def simulate_service(
               "per-step max(compute, transfer) lower bound").set(
                   overlap_bound_s)
     sched.mem.register_metrics(reg)
+    if sched.injector.enabled:
+        sched.injector.register_metrics(reg)
     m = summarize(sched.requests.values(), horizon=max(t, 1e-9),
                   sched_stats=sched.stats, chunk_size=chunk,
                   prefetch_stats=queue.stats, registry=reg)

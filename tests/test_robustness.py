@@ -1,0 +1,591 @@
+"""Fault-injection + graceful-degradation layer (robustness tentpole).
+
+Headline invariant under test: **for any fault schedule, every
+non-cancelled request produces exactly the fault-free greedy tokens, and
+the allocator/ledger end in a clean state** — failed swap-ins retry with
+backoff, exhausted retries fall back to recompute, deadlines cancel
+cleanly, and a failure burst trips (then exits) degraded mode.
+
+Pure-python sections (fault plans, ledger state machine, scheduler-level
+chaos property) run without jax compute; the engine sections reuse the
+reduced-model fixture idiom from ``test_overlap.py``.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.configs.reduced import dropless
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.memory.prefetch_queue import SWAP_IN, PrefetchQueue
+from repro.models import build_model
+from repro.robustness import (
+    DegradedModeController,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    RetryPolicy,
+    VERDICT_DELAY,
+    VERDICT_FAIL,
+)
+from repro.serving.engine import Engine
+from repro.serving.request import Request, State
+
+from _compat import given, settings, st
+
+CFG = get_config("llama3.1-8b")
+
+
+# ---------------------------------------------------------------------------
+# fault plans: determinism, JSON round-trip, windows
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic():
+    a = FaultPlan(seed=7, fail_rate=0.4, delay_rate=0.3)
+    b = FaultPlan(seed=7, fail_rate=0.4, delay_rate=0.3)
+    for tid in range(50):
+        for att in range(3):
+            assert a.verdict(tid, att, step=5) == b.verdict(tid, att, step=5)
+    # different seeds deal different schedules (statistically certain)
+    c = FaultPlan(seed=8, fail_rate=0.4, delay_rate=0.3)
+    assert any(a.verdict(t, 0, 0) != c.verdict(t, 0, 0) for t in range(50))
+    # verdicts are per-attempt: a failed attempt can succeed on retry
+    vs = {a.verdict(3, att, 0).verdict for att in range(8)}
+    assert len(vs) > 1
+
+
+def test_fault_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan(
+        seed=3, fail_rate=0.2, delay_rate=0.1, max_delay_steps=5,
+        until_step=40,
+        scripted={(0, 0): FaultSpec(VERDICT_FAIL),
+                  (2, 1): FaultSpec(VERDICT_DELAY, delay_steps=4)},
+        bw_collapse=((10, 20, 0.25),),
+        phantom_blocks=((5, 8, 3),),
+    )
+    back = FaultPlan.from_json(plan.to_json())
+    assert back == plan
+    p = tmp_path / "plan.json"
+    plan.save(str(p))
+    assert FaultPlan.load(str(p)) == plan
+
+
+def test_fault_plan_scripted_wins_and_until_step_confines():
+    plan = FaultPlan(seed=0, fail_rate=1.0, until_step=10,
+                     scripted={(5, 0): FaultSpec(VERDICT_DELAY, delay_steps=2)})
+    assert plan.verdict(5, 0, step=99).verdict == VERDICT_DELAY  # scripted wins
+    assert plan.verdict(1, 0, step=5).verdict == VERDICT_FAIL
+    assert plan.verdict(1, 0, step=10).verdict == "ok"  # random confined
+    assert plan.host_bw_factor(0) == 1.0
+    w = FaultPlan(bw_collapse=((3, 6, 0.5), (5, 9, 0.25)),
+                  phantom_blocks=((2, 4, 7),))
+    assert w.host_bw_factor(4) == 0.5
+    assert w.host_bw_factor(5) == 0.25  # overlapping windows: worst wins
+    assert w.phantom_free_blocks(3) == 7 and w.phantom_free_blocks(5) == 0
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(fail_rate=0.7, delay_rate=0.7)
+    with pytest.raises(ValueError):
+        FaultSpec(VERDICT_DELAY, delay_steps=0)
+    with pytest.raises(ValueError):
+        FaultSpec("explode")
+    with pytest.raises(ValueError):
+        FaultPlan(bw_collapse=((0, 5, 0.0),))
+
+
+def test_injector_disabled_is_inert():
+    for inj in (FaultInjector(None),
+                FaultInjector(FaultPlan(seed=1))):  # inactive plan
+        assert not inj.enabled
+        assert inj.attempt(0, 0, SWAP_IN, 0, 0) is None
+        assert inj.host_bw_factor(5) == 1.0
+        assert inj.phantom_free_blocks(5) == 0
+
+
+def test_retry_policy_backoff():
+    p = RetryPolicy(max_retries=3, backoff_steps=2, max_backoff_steps=16)
+    assert [p.backoff(a) for a in range(6)] == [2, 4, 8, 16, 16, 16]
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_steps=0)
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode controller: threshold + hysteresis
+# ---------------------------------------------------------------------------
+
+def test_degraded_controller_enter_exit():
+    c = DegradedModeController(threshold=0.5, window=4, min_events=4)
+    assert not c.observe(0, failures=1, attempts=1)  # below min_events
+    assert not c.degraded
+    assert c.observe(1, failures=3, attempts=3)  # 4/4 failures: enter
+    assert c.degraded and c.entries == 1
+    # healthy steps dilute the window; exit needs rate <= threshold/2
+    assert not c.observe(2, failures=0, attempts=4)  # 4/8 = 0.5 > 0.25
+    assert c.degraded
+    c.observe(3, failures=0, attempts=4)
+    flipped = c.observe(4, failures=0, attempts=4)  # window now 1/13 clean
+    assert flipped and not c.degraded
+
+
+def test_degraded_controller_validation():
+    with pytest.raises(ValueError):
+        DegradedModeController(threshold=0.0)
+    with pytest.raises(ValueError):
+        DegradedModeController(threshold=0.5, window=0)
+
+
+# ---------------------------------------------------------------------------
+# ledger state machine: failed -> retried -> landed / aborted
+# ---------------------------------------------------------------------------
+
+def _chaos_queue(scripted, max_retries=2, backoff=1):
+    q = PrefetchQueue(
+        injector=FaultInjector(FaultPlan(seed=0, scripted=scripted)),
+        retry=RetryPolicy(max_retries=max_retries, backoff_steps=backoff),
+    )
+    return q
+
+
+def test_queue_fail_retry_land():
+    q = _chaos_queue({(0, 0): FaultSpec(VERDICT_FAIL)})
+    t = q.issue(rid=1, kind=SWAP_IN, nbytes=100, step=0)
+    assert t.fault is not None and not q.blocked(1)
+    assert q.retry_tick(0) == []  # failure executes at the NEXT step
+    assert q.retry_tick(1) == [] and t.state == "failed" and q.blocked(1)
+    assert q.stats.transfer_failures == 1
+    assert q.stats.bytes_refetched == 100
+    retried = q.retry_tick(2)  # backoff_steps=1 expired
+    assert retried == [t] and t.attempt == 1 and t.state == "issued"
+    assert q.blocked(1), "retried attempt blocks its consumer until landed"
+    assert q.attempt_land(t, step=2) and t.state == "landed"
+    assert not q.blocked(1)
+    assert q.stats.transfer_retries == 1
+    r = q.consume(1, SWAP_IN, step=3)
+    assert r.remaining == 0 and q.fully_terminal()
+
+
+def test_queue_retries_exhausted_aborts():
+    q = _chaos_queue({(0, 0): FaultSpec(VERDICT_FAIL),
+                      (0, 1): FaultSpec(VERDICT_FAIL)}, max_retries=1)
+    t = q.issue(rid=4, kind=SWAP_IN, nbytes=64, step=0)
+    q.retry_tick(1)  # fail attempt 0 -> backoff
+    q.retry_tick(2)  # retry as attempt 1 (doomed too)
+    assert t.attempt == 1
+    q.retry_tick(3)  # attempt 1 fails: budget spent -> terminal abort
+    assert t.state == "cancelled" and t.cancel_reason == "retries_exhausted"
+    assert q.stats.transfers_aborted == 1
+    assert q.has_aborted(4) and q.take_aborted(4) == "retries_exhausted"
+    assert not q.has_aborted(4)  # take is one-shot
+    assert q.outstanding() == 0 and q.fully_terminal()
+
+
+def test_queue_delay_defers_then_lands():
+    q = _chaos_queue({(0, 0): FaultSpec(VERDICT_DELAY, delay_steps=3)})
+    t = q.issue(rid=2, kind=SWAP_IN, nbytes=50, step=0)
+    assert t.ready_step == 3
+    assert not q.blocked(2), "a delayed first attempt is consumable (late)"
+    # engine path: attempt_land defers until ready_step
+    assert not q.attempt_land(t, step=1) and t.deferred
+    assert q.retry_tick(2) == []
+    assert q.retry_tick(3) == [t] and not t.deferred
+    assert q.attempt_land(t, step=3)
+    # sim path: progress is gated the same way
+    q2 = _chaos_queue({(0, 0): FaultSpec(VERDICT_DELAY, delay_steps=3)})
+    t2 = q2.issue(rid=2, kind=SWAP_IN, nbytes=50, step=0)
+    assert q2.progress(999, step=1) == 0 and t2.remaining == 50
+    assert q2.progress(999, step=3) == 50 and t2.state == "landed"
+
+
+def test_queue_cancel_reason_recorded():
+    q = PrefetchQueue()
+    q.issue(rid=9, kind=SWAP_IN, nbytes=10, step=0)
+    q.cancel(9, SWAP_IN, reason="deadline")
+    assert q.fully_terminal() and q.outstanding() == 0
+    q2 = PrefetchQueue()
+    q2.issue(rid=1, kind=SWAP_IN, nbytes=10, step=0)
+    assert q2.cancel_outstanding("shutdown") == 1
+    assert q2.outstanding() == 0
+
+
+def test_queue_actionable_bytes_gating():
+    q = _chaos_queue({(0, 0): FaultSpec(VERDICT_FAIL),
+                      (1, 0): FaultSpec(VERDICT_DELAY, delay_steps=4)})
+    q.issue(rid=1, kind=SWAP_IN, nbytes=100, step=0)  # doomed
+    q.issue(rid=2, kind=SWAP_IN, nbytes=40, step=0)   # delayed to step 4
+    q.issue(rid=3, kind=SWAP_IN, nbytes=7, step=0)    # clean
+    assert q.actionable_bytes(0) == 7    # doomed + not-ready excluded
+    assert q.actionable_bytes(4) == 47   # delay window over
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level chaos property (satellite: random fault schedules through
+# an over-subscribed 16-page pool; no jax — the token stream is synthetic)
+# ---------------------------------------------------------------------------
+
+def _drive_scheduler(sched: Scheduler, reqs, max_steps=4000):
+    """Engine-less drive loop: lands ledger bytes via ``progress`` like the
+    sim, emits synthetic tokens, returns steps executed."""
+    for r in reqs:
+        sched.add_request(r)
+    q = sched.prefetch_queue
+    rng = np.random.default_rng(0)
+    steps = 0
+    while sched.has_work and steps < max_steps:
+        plan = sched.next_step(now=float(steps))
+        if plan is None:
+            break
+        if plan.pump:
+            q.progress(q.actionable_bytes(plan.step), step=plan.step)
+        else:
+            sched.commit_prefetch(plan)
+            for rid in plan.decode_rids:
+                sched.requests[rid].output.append(0)
+            for rid in plan.finishing_rids:
+                sched.requests[rid].output.append(0)
+            # random per-step link budget: sometimes everything lands ahead,
+            # sometimes nothing does (pure late/sync debt)
+            q.progress(float(rng.integers(0, 4096)), step=plan.step)
+        sched.complete_step(plan, now=float(steps))
+        steps += 1
+    return steps
+
+
+def _pool16_cfg(**kw):
+    return SchedulerConfig(
+        chunk_size=16, max_decode_batch=4, max_concurrent_prefills=2,
+        kv_capacity_tokens=48, preemption="swap", kv_block_size=4,
+        num_kv_blocks=16, **kw)
+
+
+def _pool16_reqs(n=5):
+    return [Request(rid=i, prompt=[1] * (10 + 3 * i), max_new_tokens=6 + i)
+            for i in range(n)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       fail_rate=st.floats(min_value=0.0, max_value=0.6),
+       delay_rate=st.floats(min_value=0.0, max_value=0.3),
+       max_retries=st.integers(min_value=0, max_value=3))
+def test_chaos_property_over_subscribed_pool(seed, fail_rate, delay_rate,
+                                             max_retries):
+    """Any random fault schedule through the over-subscribed 16-page pool:
+    every request completes with its full synthetic token stream, zero
+    leaked blocks, zero dangling ledger entries, no deadlock."""
+    plan = FaultPlan(seed=seed, fail_rate=fail_rate, delay_rate=delay_rate)
+    sched = Scheduler(_pool16_cfg(fault_plan=plan,
+                                  max_transfer_retries=max_retries), CFG)
+    reqs = _pool16_reqs()
+    steps = _drive_scheduler(sched, reqs)
+    assert not sched.has_work, f"deadlock: work left after {steps} steps"
+    for r in reqs:
+        assert r.state is State.DONE
+        assert len(r.output) == r.max_new_tokens, (
+            f"rid {r.rid}: {len(r.output)} tokens != {r.max_new_tokens}")
+    q = sched.prefetch_queue
+    assert q.outstanding() == 0, "dangling ledger entries"
+    assert q.fully_terminal()
+    assert sched.mem.allocator.used_blocks == 0, "leaked pool pages"
+    assert not sched.mem.swapped, "dangling host swap records"
+
+
+def test_chaos_schedule_matches_fault_free_token_counts():
+    """The same workload fault-free vs heavy chaos: identical per-request
+    token counts (the scheduler-level half of token identity)."""
+    base = Scheduler(_pool16_cfg(), CFG)
+    base_reqs = _pool16_reqs()
+    _drive_scheduler(base, base_reqs)
+    chaos = Scheduler(_pool16_cfg(
+        fault_plan=FaultPlan(seed=11, fail_rate=0.5, delay_rate=0.3),
+        max_transfer_retries=1), CFG)
+    chaos_reqs = _pool16_reqs()
+    _drive_scheduler(chaos, chaos_reqs)
+    assert ([len(r.output) for r in base_reqs]
+            == [len(r.output) for r in chaos_reqs])
+
+
+def test_phantom_blocks_stall_admissions_only():
+    """Spurious OutOfBlocks pressure defers NEW admissions while it lasts
+    but harms nothing admitted; everything completes once the window ends."""
+    plan = FaultPlan(seed=0, phantom_blocks=((0, 6, 16),))  # whole pool
+    sched = Scheduler(_pool16_cfg(fault_plan=plan), CFG)
+    reqs = _pool16_reqs(3)
+    _drive_scheduler(sched, reqs)
+    assert all(r.state is State.DONE for r in reqs)
+    assert sched.stats.injected_oob_stalls > 0
+    assert sched.mem.allocator.used_blocks == 0
+
+
+def test_deadline_cancellation_clean():
+    """request_timeout: the starved tail is cancelled cleanly — allocator
+    refs, ledger entries and host swap records all released; survivors
+    keep their full token stream; cancelled never counts completed."""
+    sched = Scheduler(_pool16_cfg(request_timeout=8.0), CFG)
+    reqs = _pool16_reqs(6)
+    _drive_scheduler(sched, reqs)
+    done = [r for r in reqs if r.state is State.DONE]
+    cancelled = [r for r in reqs if r.state is State.CANCELLED]
+    assert cancelled, "timeout never fired on the starved tail"
+    assert sched.stats.deadline_cancellations == len(cancelled)
+    for r in cancelled:
+        assert r.cancel_reason == "deadline"
+        assert r.finish_time is None
+    for r in done:
+        assert len(r.output) == r.max_new_tokens
+    assert sched.prefetch_queue.outstanding() == 0
+    assert sched.mem.allocator.used_blocks == 0
+    assert not sched.mem.swapped
+    # absolute Request.deadline composes (earlier wins)
+    s2 = Scheduler(_pool16_cfg(), CFG)
+    r = Request(rid=0, prompt=[1] * 8, max_new_tokens=40, deadline=3.0)
+    _drive_scheduler(s2, [r])
+    assert r.state is State.CANCELLED and r.cancel_reason == "deadline"
+
+
+def test_degraded_mode_trips_and_recovers():
+    """A failure burst (every attempt fails until step 30) trips degraded
+    mode — prefetch off, admissions shed — and the scheduler exits it and
+    completes everything once the burst passes."""
+    plan = FaultPlan(seed=2, fail_rate=1.0, until_step=30)
+    sched = Scheduler(_pool16_cfg(fault_plan=plan, max_transfer_retries=2,
+                                  degraded_threshold=0.5, degraded_window=8,
+                                  degraded_min_events=2), CFG)
+    reqs = _pool16_reqs(5)
+    _drive_scheduler(sched, reqs)
+    assert all(r.state is State.DONE for r in reqs)
+    assert sched.degraded is not None and sched.degraded.entries >= 1
+    assert not sched.degraded.degraded, "never exited degraded mode"
+    assert sched.stats.degraded_mode_steps > 0
+    assert sched.mem.allocator.used_blocks == 0
+    assert sched.prefetch_queue.outstanding() == 0
+
+
+def test_fault_free_sched_identical_with_robustness_built():
+    """faults off == PR 7 behavior: a scheduler with no robustness knobs
+    and one with an inactive plan emit byte-identical schedules."""
+    from repro.obs.trace import TraceRecorder
+
+    def run(cfg_kw):
+        tr = TraceRecorder("x", manual_clock=True)
+        sched = Scheduler(_pool16_cfg(**cfg_kw), CFG, tracer=tr)
+        _drive_scheduler(sched, _pool16_reqs())
+        return tr.sched_sequence()
+
+    assert run({}) == run({"fault_plan": FaultPlan(seed=5)})
+
+
+# ---------------------------------------------------------------------------
+# engine: token identity under chaos + cancel-while-in-flight + shutdown
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_llama():
+    cfg = dropless(reduce_config(get_config("llama3.1-8b")))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+SWAP_KNOBS = dict(chunk_size=16, max_decode_batch=3,
+                  prefetch_buffer_bytes=0, max_concurrent_prefills=2,
+                  kv_capacity_tokens=30, preemption="swap", kv_block_size=4)
+
+
+def _swap_reqs(cfg, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, L).tolist(),
+                    max_new_tokens=o)
+            for i, (L, o) in enumerate([(17, 6), (23, 5), (12, 7)])]
+
+
+def _run_engine(model, params, cfg, reqs, **cfg_kw):
+    eng = Engine(model, params, SchedulerConfig(**SWAP_KNOBS, **cfg_kw),
+                 max_len=64)
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                           max_new_tokens=r.max_new_tokens))
+    eng.run(max_steps=2000)
+    outs = {r.rid: list(eng.scheduler.requests[r.rid].output) for r in reqs}
+    return eng, outs
+
+
+def test_engine_token_identity_under_chaos(small_llama):
+    """Scripted fail + delay + random tail: greedy outputs are exactly the
+    fault-free tokens, the ledger/staging/host tier end clean."""
+    cfg, model, params = small_llama
+    reqs = _swap_reqs(cfg)
+    _, base = _run_engine(model, params, cfg, reqs)
+    plan = FaultPlan(seed=2, fail_rate=0.4, delay_rate=0.2,
+                     scripted={(0, 0): FaultSpec(VERDICT_FAIL),
+                               (1, 0): FaultSpec(VERDICT_DELAY,
+                                                 delay_steps=2)})
+    eng, outs = _run_engine(model, params, cfg, reqs, fault_plan=plan,
+                            max_transfer_retries=2)
+    assert outs == base, "fault injection changed greedy outputs"
+    qs = eng.scheduler.prefetch_queue.stats
+    assert qs.transfer_failures > 0 and qs.transfer_retries > 0
+    q = eng.scheduler.prefetch_queue
+    assert q.outstanding() == 0 and q.fully_terminal()
+    assert not eng._staged and not eng.swap_store
+    assert eng.scheduler.mem.allocator.used_blocks == 0
+
+
+def test_engine_fallback_recompute_token_identity(small_llama):
+    """Every attempt of every transfer fails: each swap restore exhausts
+    its retry budget and falls back to recompute — tokens still identical."""
+    cfg, model, params = small_llama
+    reqs = _swap_reqs(cfg)
+    _, base = _run_engine(model, params, cfg, reqs)
+    eng, outs = _run_engine(
+        model, params, cfg, reqs,
+        fault_plan=FaultPlan(seed=0, fail_rate=1.0),
+        max_transfer_retries=1)
+    assert outs == base, "recompute fallback changed greedy outputs"
+    ss = eng.scheduler.stats
+    assert ss.fallback_recomputes > 0, "no fallback despite 100% failures"
+    assert eng.scheduler.prefetch_queue.stats.transfers_aborted > 0
+    assert not eng.swap_store and not eng._staged
+    assert eng.scheduler.mem.allocator.used_blocks == 0
+
+
+def test_engine_cancel_while_transfer_in_flight(small_llama):
+    """Satellite regression: cancelling a swapped request whose SWAP_IN is
+    still in flight releases the staged copy, the host entry, and the
+    ledger intent; the remaining requests complete untouched."""
+    cfg, model, params = small_llama
+    reqs = _swap_reqs(cfg)
+    _, base = _run_engine(model, params, cfg, reqs)
+    # a huge scripted delay keeps every first swap-in attempt in flight
+    plan = FaultPlan(seed=0, scripted={
+        (tid, 0): FaultSpec(VERDICT_DELAY, delay_steps=500)
+        for tid in range(8)})
+    eng = Engine(model, params,
+                 SchedulerConfig(fault_plan=plan, **SWAP_KNOBS), max_len=64)
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                           max_new_tokens=r.max_new_tokens))
+    victim = None
+    for _ in range(200):
+        if eng.step(now=float(eng.steps_run)) is None:
+            break
+        q = eng.scheduler.prefetch_queue
+        swapped = [r.rid for r in eng.scheduler.swapped
+                   if not q.readable(r.rid, SWAP_IN)]
+        if swapped:
+            victim = swapped[0]
+            break
+    assert victim is not None, "no swap-in ever left in flight"
+    assert eng.scheduler.cancel_request(victim, "test_cancel",
+                                        now=float(eng.steps_run))
+    eng._purge_released()
+    assert victim not in eng.swap_store and victim not in eng._staged
+    q = eng.scheduler.prefetch_queue
+    assert not q.blocked(victim) and q.readable(victim, SWAP_IN)
+    assert eng.scheduler.requests[victim].state is State.CANCELLED
+    eng.run(max_steps=2000)
+    for r in reqs:
+        if r.rid == victim:
+            continue
+        assert (list(eng.scheduler.requests[r.rid].output) == base[r.rid]), (
+            f"survivor {r.rid} diverged after cancelling {victim}")
+    assert q.outstanding() == 0 and q.fully_terminal()
+    assert eng.scheduler.mem.allocator.used_blocks == 0
+    assert not eng.swap_store and not eng._staged
+
+
+def test_engine_shutdown_graceful(small_llama):
+    """Engine.shutdown mid-run (the launch.serve ^C/SIGTERM path): every
+    request cancelled, ledger terminal, no staged/host state left."""
+    cfg, model, params = small_llama
+    eng = Engine(model, params, SchedulerConfig(**SWAP_KNOBS), max_len=64)
+    for r in _swap_reqs(cfg):
+        eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                           max_new_tokens=30))
+    for _ in range(6):
+        eng.step(now=float(eng.steps_run))
+    n = eng.shutdown("interrupt")
+    assert n == 3
+    states = [r.state for r in eng.scheduler.requests.values()]
+    assert all(s in (State.DONE, State.CANCELLED) for s in states)
+    assert all(r.cancel_reason == "interrupt"
+               for r in eng.scheduler.requests.values()
+               if r.state is State.CANCELLED)
+    q = eng.scheduler.prefetch_queue
+    assert q.outstanding() == 0 and q.fully_terminal()
+    assert not eng.swap_store and not eng._staged
+    assert eng.scheduler.mem.allocator.used_blocks == 0
+    assert not eng.scheduler.has_work  # shutdown is terminal
+
+
+# ---------------------------------------------------------------------------
+# sim: fault pricing agrees with the engine's fault schedule
+# ---------------------------------------------------------------------------
+
+def test_sim_chaos_counters_match_engine(small_llama):
+    from repro.sim.hardware import TPUV6E
+    from repro.sim.service import simulate_service
+
+    cfg, model, params = small_llama
+    plan = FaultPlan(seed=2, fail_rate=0.4, delay_rate=0.2,
+                     scripted={(0, 0): FaultSpec(VERDICT_FAIL)})
+    reqs = _swap_reqs(cfg)
+    eng, _ = _run_engine(model, params, cfg, reqs, fault_plan=plan,
+                         max_transfer_retries=2)
+    sim = simulate_service(
+        TPUV6E, cfg, workload=None, qps=1.0, mode="packed", chunk=16,
+        max_decode_batch=3, max_concurrent_prefills=2,
+        kv_capacity_tokens=30, preemption="swap", kv_block_size=4,
+        fault_plan=plan, max_transfer_retries=2,
+        requests=[Request(rid=r.rid, prompt=list(r.prompt),
+                          max_new_tokens=r.max_new_tokens) for r in reqs])
+    qs = eng.scheduler.prefetch_queue.stats
+    m = sim.metrics
+    assert m["transfer_failures"] == qs.transfer_failures
+    assert m["retry_count"] == qs.transfer_retries
+    assert m["transfers_aborted"] == qs.transfers_aborted
+    assert m["bytes_refetched"] == qs.bytes_refetched
+    assert m["completed"] == len(reqs)
+
+
+def test_sim_bw_collapse_prices_stall():
+    """A host-link bandwidth collapse window slows the run down without
+    changing the schedule (same steps, same swap traffic)."""
+    from repro.sim.hardware import TPUV6E
+    from repro.sim.service import simulate_service
+
+    def run(plan):
+        return simulate_service(
+            TPUV6E, CFG, workload=None, qps=1.0, mode="packed", chunk=256,
+            max_decode_batch=16, kv_block_size=16, kv_capacity_tokens=1024,
+            preemption="swap", fault_plan=plan,
+            requests=[Request(rid=i, prompt=[0] * 256, max_new_tokens=48,
+                              arrival_time=0.0) for i in range(8)])
+
+    base = run(None)
+    slow = run(FaultPlan(seed=0, bw_collapse=((0, 10_000, 0.05),)))
+    assert slow.steps == base.steps
+    assert slow.metrics["swapped_bytes"] == base.metrics["swapped_bytes"]
+    assert slow.sim_time > base.sim_time, "50x slower link cost nothing"
+
+
+def test_sim_fault_free_identical_to_no_plan():
+    """fault_plan=None and an inactive plan price byte-identically (the
+    PR 7 no-regression guarantee at sim level)."""
+    from repro.sim.hardware import TPUV6E
+    from repro.sim.service import simulate_service
+
+    def run(plan):
+        r = simulate_service(
+            TPUV6E, CFG, workload=None, qps=1.0, mode="packed", chunk=256,
+            max_decode_batch=16, kv_block_size=16, kv_capacity_tokens=1024,
+            preemption="swap", fault_plan=plan,
+            requests=[Request(rid=i, prompt=[0] * 256, max_new_tokens=48,
+                              arrival_time=0.0) for i in range(8)])
+        return r.steps, r.sim_time, r.metrics["bytes_overlapped"]
+
+    assert run(None) == run(FaultPlan(seed=9))

@@ -17,9 +17,14 @@ the pipeline's structural invariants:
     ``issued`` precedes everything else for its tid, nothing is ``consumed``
     before it ``landed`` unless the consume receipt says so (``late_bytes >
     0`` or ``sync``), and each tid reaches at most one terminal state
-    (consumed / cancelled) with no events after it;
-  * **requests** — every admitted request reaches a terminal ``finish``
-    event (no request is silently dropped mid-flight);
+    (consumed / cancelled) with no events after it.  The robustness layer
+    adds two non-terminal states: a ``failed`` attempt voids any earlier
+    ``landed`` (the staged copy was torn down) and must be followed by
+    ``retried`` (backoff expired, new attempt) or ``cancelled`` (retry
+    budget exhausted); ``retried`` is only legal directly after ``failed``;
+  * **requests** — every admitted request reaches a terminal event:
+    ``finish`` (completed) or ``cancel`` (deadline expiry / shutdown, with
+    its reason) — no request is silently dropped mid-flight;
   * **compare** (``--compare``) — the schedule-determined event sequences
     (the ``args.sched`` canonical keys) of two traces are identical: the
     engine and the simulator, driven by the same Scheduler over the same
@@ -122,6 +127,7 @@ def check_transfer_lifecycle(events: List[dict], errs: List[str]) -> None:
         seen.setdefault(int(tid), []).append((i, str(state), args))
     for tid, evs in sorted(seen.items()):
         landed = False
+        failed = False  # a 'failed' awaits its 'retried'/'cancelled'
         terminal: Optional[str] = None
         for j, (i, state, args) in enumerate(evs):
             if terminal is not None:
@@ -131,7 +137,18 @@ def check_transfer_lifecycle(events: List[dict], errs: List[str]) -> None:
             if j == 0 and state != "issued":
                 errs.append(f"transfer {tid}: first event is {state!r}, "
                             "not 'issued'")
-            if state == "landed":
+            if failed and state not in ("retried", "cancelled"):
+                errs.append(
+                    f"transfer {tid}: event {i} ({state!r}) directly after "
+                    "'failed' — a failed attempt must be 'retried' or "
+                    "'cancelled' before anything else")
+            if state == "retried" and not failed:
+                errs.append(f"transfer {tid}: 'retried' at event {i} "
+                            "without a preceding 'failed'")
+            failed = state == "failed"
+            if state == "failed":
+                landed = False  # the attempt's staged copy was torn down
+            elif state == "landed":
                 landed = True
             elif state == "consumed":
                 late = float(args.get("late_bytes", 0.0) or 0.0)
@@ -155,11 +172,11 @@ def check_request_terminal(events: List[dict], errs: List[str]) -> None:
             continue
         if e["name"] == "admit":
             admitted.add(rid)
-        elif e["name"] == "finish":
+        elif e["name"] in ("finish", "cancel"):
             finished.add(rid)
     for rid in sorted(admitted - finished):
         errs.append(f"request {rid}: admitted but never reached a terminal "
-                    "'finish' event")
+                    "'finish' or 'cancel' event")
 
 
 def sched_sequence(events: List[dict]) -> List[str]:
