@@ -143,6 +143,62 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
     want = np.asarray(f_dense_w(kd, vals)).reshape(Bd * pps, page, KV, d)
     np.testing.assert_allclose(got, want, rtol=0, atol=0)
 
+    # ------------------------------------------------------------------
+    # mixed batch: ONE unified attention call for decode rows + prefill
+    # chunks vs the old per-token prefill expansion. The unified path reads
+    # each chunk's paged prefix ONCE per chunk; the per-token path re-reads
+    # it for every chunk token — the bytes gap is the point of the kernel.
+    # ------------------------------------------------------------------
+    C = 2
+    chunk_len = 128 if smoke else 512
+    prefix = 2 * page  # cached context ahead of each chunk
+    seg_q = [1] * Bd + [chunk_len] * C
+    seg_kv = lens_np.tolist() + [prefix + chunk_len] * C
+    Sm = len(seg_q)
+    Nm = sum(seg_q)
+    nb_m = int(-(-max(seg_kv) // page))
+    tables_m = jnp.asarray(
+        ((np.arange(Sm) % Bd)[:, None] * pps
+         + np.arange(nb_m)[None, :]).astype(np.int32))
+    cu_m = np.zeros((Sm + 1,), np.int32)
+    cu_m[1:] = np.cumsum(seg_q)
+    kv_m = jnp.asarray(np.asarray(seg_kv, np.int32))
+    qm = jax.random.normal(ks[3], (Nm, H, d), jnp.float32)
+    f_mixed = jax.jit(lambda q, pk, pv, cu, kl, t: ops.mixed_attention_rows(
+        q, pk, pv, cu, kl, t, qb=chunk_len))
+    us_mix = _time(f_mixed, qm, pool_k, pool_v, jnp.asarray(cu_m), kv_m, tables_m)
+    # old path: expand every chunk token to its own row length + table row
+    row_len = lens_np.tolist()
+    row_tab = [np.asarray(tables_m[s]) for s in range(Bd)]
+    for s in range(Bd, Sm):
+        for j in range(chunk_len):
+            row_len.append(prefix + j + 1)
+            row_tab.append(np.asarray(tables_m[s]))
+    row_len_j = jnp.asarray(np.asarray(row_len, np.int32))
+    row_tab_j = jnp.asarray(np.stack(row_tab))
+    f_pt = jax.jit(lambda q, pk, pv, l, t: ops.paged_attention_rows(q, pk, pv, l, t))
+    us_pt = _time(f_pt, qm, pool_k, pool_v, row_len_j, row_tab_j)
+    # prefill-side KV tokens read (block-rounded): once per CHUNK vs once
+    # per chunk TOKEN
+    uni_prefill = tokens_touched(seg_kv[Bd:], page)
+    pt_prefill = tokens_touched(row_len[Bd:], page)
+    assert uni_prefill < pt_prefill, (
+        "unified path must read strictly fewer prefill KV bytes")
+    kv_row_bytes = KV * d * 2 * kv_elt_bytes
+    print_fn(f"attn_mixed_unified_{Bd}d+{C}x{chunk_len}p,{us_mix:.0f},"
+             f"prefill_bytes_ratio={uni_prefill/pt_prefill:.3f}")
+    print_fn(f"attn_mixed_per_token_{Bd}d+{C}x{chunk_len}p,{us_pt:.0f},"
+             f"prefill_kv_tokens={pt_prefill}")
+    record("attn_mixed_unified", us_mix,
+           tokens_per_s=Nm / (us_mix * 1e-6),
+           prefill_kv_tokens_read=uni_prefill,
+           prefill_bytes_touched=uni_prefill * kv_row_bytes,
+           prefill_bytes_vs_per_token=uni_prefill / pt_prefill)
+    record("attn_mixed_per_token", us_pt,
+           tokens_per_s=Nm / (us_pt * 1e-6),
+           prefill_kv_tokens_read=pt_prefill,
+           prefill_bytes_touched=pt_prefill * kv_row_bytes)
+
     # SSD chunk scan
     Bs, Ss, nh, hd, G, ds = 2, (512 if smoke else 2048), 8, 32, 1, 32
     x = jax.random.normal(ks[0], (Bs, Ss, nh, hd), jnp.float32)
@@ -171,6 +227,20 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
     err_p = float(jnp.max(jnp.abs(out - expect)))
     print_fn(f"pallas_paged_interpret_check,0,max_err={err_p:.2e}")
     assert err_p < 2e-5
+
+    # mixed kernel (interpret) == jnp oracle on a tiny decode+chunk batch
+    cu_s = jnp.asarray(np.asarray([0, 1, 2, 10], np.int32))
+    kv_s = jnp.asarray(np.asarray([int(lens_np[0]), int(lens_np[1]),
+                                   prefix + 8], np.int32))
+    tab_s = tables_m[:3]
+    qs = qm[:10]
+    out = ops.mixed_attention_rows(qs, pool_k, pool_v, cu_s, kv_s, tab_s,
+                                   qb=8, interpret=True)
+    expect = ops.mixed_attention_rows(qs, pool_k, pool_v, cu_s, kv_s, tab_s,
+                                      qb=8)
+    err_m = float(jnp.max(jnp.abs(out - expect)))
+    print_fn(f"pallas_mixed_interpret_check,0,max_err={err_m:.2e}")
+    assert err_m < 2e-5
 
     if json_path:
         with open(json_path, "w") as f:

@@ -158,6 +158,15 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
         f"sim overlapped {sim_same.metrics['bytes_overlapped']}, "
         f"engine {q_on.bytes_overlapped}")
     assert sim_same.metrics["prefetch_sync_bytes"] == q_on.bytes_sync
+    # the unified attention byte-ledger is schedule-determined too: engine
+    # and sim both price each segment's paged KV read at kv_block
+    # granularity (a prefill chunk's prefix once per CHUNK, not per token),
+    # so the touched/padded token counters must be EQUAL, not just close
+    s_eng = eng_on.scheduler.stats
+    assert sim_same.metrics["attn_tokens_touched"] == s_eng.attn_tokens_touched, (
+        f"sim attn ledger {sim_same.metrics['attn_tokens_touched']} != "
+        f"engine {s_eng.attn_tokens_touched}")
+    assert sim_same.metrics["attn_tokens_padded"] == s_eng.attn_tokens_padded
 
     # (b) prefix-cache adoption workload
     adopt_knobs = dict(chunk_size=16, max_decode_batch=4,
@@ -192,6 +201,8 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
             "sim_prefetch_stall_ms": m_on["prefetch_stall_ms"],
             "engine_bytes_overlapped": q_on.bytes_overlapped,
             "engine_overlap_efficiency": q_on.overlap_efficiency(),
+            "attn_tokens_touched": s_eng.attn_tokens_touched,
+            "attn_tokens_padded": s_eng.attn_tokens_padded,
             "token_identical": True,
         }
         with open(json_path, "w") as f:

@@ -59,16 +59,31 @@ class PagedView:
     slot), carrying the allocator's **actual** page ids, already sliced to
     ``nb`` columns where ``nb * page_size`` covers the longest live context
     this step. Dead entries point at the scratch page, so every id is a
-    valid pool index even for grid steps the kernel skips."""
+    valid pool index even for grid steps the kernel skips.
+
+    The segment layout (``cu_q_lens`` / ``kv_lens`` / ``seg_slots``) carries
+    the step's mixed batch: decode rows first (one 1-token segment each),
+    then one segment per prefill chunk, padding segments zero-length against
+    the scratch slot. ``q_block`` is the static pow2 bucket of the longest
+    segment — the Pallas q-block row count, part of the jit cache key."""
 
     block_tables: jax.Array  # (n_slots+1, nb) int32 physical page ids
     page_size: int
     use_kernel: bool = False  # Pallas kernel (TPU) vs jnp oracle (CPU)
     interpret: bool = False
+    cu_q_lens: Optional[jax.Array] = None  # (S+1,) int32 packed-row offsets
+    kv_lens: Optional[jax.Array] = None  # (S,) int32 keys per segment
+    seg_slots: Optional[jax.Array] = None  # (S,) int32 owning slot per segment
+    q_block: int = 1  # static pow2 q-block rows for the mixed kernel
 
     def row_tables(self, slots: jax.Array) -> jax.Array:
         """Per-row tables: each packed row inherits its slot's table."""
         return self.block_tables[slots]
+
+    def seg_tables(self) -> jax.Array:
+        """Per-segment tables: each mixed-batch segment reads through the
+        table of the slot that owns it."""
+        return self.block_tables[self.seg_slots]
 
     def scatter(self, pool: jax.Array, slots, positions, values) -> jax.Array:
         """Write each row's new K/V through the block table: token at
@@ -105,16 +120,19 @@ def _packed_gqa(p, cfg: ModelConfig, spec: LayerSpec, x, slots, positions, cache
     window = cfg.local_window if spec.attn_kind == "local" else None
     if paged is not None:
         # physical page pool: writes scatter through the block table, reads
-        # follow each row's own pages up to its own position — O(N * len)
-        # instead of O(N * S_max)
-        from repro.kernels.paged_attention import ragged_paged_attention
+        # run ONE mixed-batch ragged call over the step's segment layout —
+        # decode rows and prefill chunks together, each chunk a causal
+        # q-block whose KV pages are read once per chunk: O(sum_seg len)
+        # instead of O(N * S_max) or one prefix read per chunk token
+        from repro.kernels.paged_attention import ragged_mixed_attention
 
         ck = paged.scatter(cache["k"], slots, positions, k)
         cv = paged.scatter(cache["v"], slots, positions, v)
-        o = ragged_paged_attention(
+        o = ragged_mixed_attention(
             q.reshape(N, KV, G, hd).astype(x.dtype),
             ck, cv,
-            positions + 1, paged.row_tables(slots),
+            paged.cu_q_lens, paged.kv_lens, paged.seg_tables(),
+            qb=paged.q_block,
             window=window, softcap=cfg.attn_logit_softcap,
             use_kernel=paged.use_kernel, interpret=paged.interpret,
         ).reshape(N, cfg.n_heads * hd)

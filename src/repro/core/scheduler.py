@@ -218,6 +218,26 @@ class StepPlan:
     # True for a robustness "pump" cycle: zero scheduled tokens, emitted
     # only so retry/backoff clocks advance while every restore is parked
     pump: bool = False
+    # unified mixed-batch segment layout (decode rows first — one 1-token
+    # segment each — then one segment per prefill chunk): cumulative packed
+    # row offsets and cumulative KV extents. Segment s spans packed rows
+    # [cu_q_lens[s], cu_q_lens[s+1]) and its last row attends
+    # cu_kv_lens[s+1] - cu_kv_lens[s] keys. The engine feeds these straight
+    # to the mixed kernel; the sim prices attention bytes from the same
+    # arrays, so the two stay byte-identical by construction.
+    cu_q_lens: Tuple[int, ...] = (0,)
+    cu_kv_lens: Tuple[int, ...] = (0,)
+    # mid-block prefix-cache adoptions: device page copies the engine
+    # applies before any other device write this step —
+    # (rid, src_block, dst_block, n_valid_tokens) per partial tail
+    prefix_copies: List[Tuple[int, int, int, int]] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def kv_lens(self) -> Tuple[int, ...]:
+        """Per-segment KV extents (diff of cu_kv_lens)."""
+        return tuple(b - a for a, b in zip(self.cu_kv_lens,
+                                           self.cu_kv_lens[1:]))
 
     @property
     def total_prefill_tokens(self) -> int:
@@ -234,17 +254,6 @@ class StepPlan:
     @property
     def is_empty(self) -> bool:
         return self.total_tokens == 0
-
-
-def _blocks_prefix_sum(a: int, b: int, bs: int) -> int:
-    """sum_{t=a+1..b} ceil(t / bs): cumulative blocks a run of rows at
-    positions a..b-1 touches (the row at position p attends p+1 keys)."""
-
-    def f(t: int) -> int:
-        q, r = divmod(t, bs)
-        return bs * q * (q + 1) // 2 + r * (q + 1)
-
-    return f(b) - f(a)
 
 
 @dataclasses.dataclass
@@ -460,10 +469,6 @@ class Scheduler:
         self.swapped: List[Request] = []  # swap-out order (oldest first)
         self.requests: Dict[int, Request] = {}
         self.stats = SchedStats()
-        # dense-gather padding extent (engine sets this to its max_len); when
-        # None, padding is measured against the step's longest row — what a
-        # rectangular batch kernel would read
-        self.padded_len: Optional[int] = None
 
     # ------------------------------------------------------------------ API
     def add_request(self, req: Request) -> None:
@@ -968,6 +973,22 @@ class Scheduler:
             plan.pump = True
             self.stats.pump_steps += 1
 
+        # stamp the plan's mixed-batch segment layout: decode rows first (one
+        # 1-token segment each, attending its full context), then one segment
+        # per prefill chunk (its last row attends start+length keys). This is
+        # THE layout — the engine builds the kernel's cu-lens arrays from it
+        # and the attention pricing below reads the same numbers.
+        cu_q, cu_kv = [0], [0]
+        for r in plan.decode_rids:
+            cu_q.append(cu_q[-1] + 1)
+            cu_kv.append(cu_kv[-1] + self.requests[r].context_len)
+        for seg in plan.prefill_segments:
+            cu_q.append(cu_q[-1] + seg.length)
+            cu_kv.append(cu_kv[-1] + seg.start + seg.length)
+        plan.cu_q_lens = tuple(cu_q)
+        plan.cu_kv_lens = tuple(cu_kv)
+        plan.prefix_copies.extend(self.mem.drain_prefix_copies())
+
         if not plan.pump:
             # prefetch lookahead: the decode set whose attention follows this
             # packed compute phase (current decodes + every finishing prefill)
@@ -989,25 +1010,22 @@ class Scheduler:
                 self.stats.prefetch_steps += 1
                 self.stats.prefetch_coverage_sum += plan.prefetch.coverage
 
-            # ragged-attention accounting: the paged path reads whole blocks
-            # up to each row's own length; the dense gather reads every row
-            # padded to `padded_len` (engine: max_len; sim: longest row)
+            # mixed-batch attention accounting: the unified kernel reads each
+            # SEGMENT's blocks once — a decode row its context, a prefill
+            # chunk its prefix+chunk — never once per chunk token. Priced
+            # straight off the plan's segment layout, so engine and sim agree
+            # by construction.
             bs = self.mem.block_size
-            decode_lens = [self.requests[r].context_len
-                           for r in plan.decode_rids]
-            touched = kv_tokens_touched(decode_lens, bs)  # new token's pos + 1
-            max_row = max(decode_lens, default=1)
-            for seg in plan.prefill_segments:
-                touched += bs * _blocks_prefix_sum(
-                    seg.start, seg.start + seg.length, bs)
-                max_row = max(max_row, seg.start + seg.length)
+            kv_lens = plan.kv_lens
+            touched = kv_tokens_touched(kv_lens, bs)
+            max_row = max(kv_lens, default=1)
             rows = len(plan.decode_slots) + plan.total_prefill_tokens
             self.stats.attn_tokens_touched += touched
-            # baseline at the same block granularity as `touched` (a
-            # rectangular gather over the paged pool reads whole blocks
-            # too), so savings are never negative and sim/engine comparable
-            pad = self.padded_len if self.padded_len is not None else max_row
-            self.stats.attn_tokens_padded += rows * (bs * -(-pad // bs))
+            # baseline at the same block granularity as `touched`: what a
+            # rectangular gather over the paged pool would read — every row
+            # padded to the step's longest context — so savings are never
+            # negative and sim/engine comparable
+            self.stats.attn_tokens_padded += rows * (bs * -(-max_row // bs))
 
         # one-step-ahead transfer intents: issued against the ledger while
         # THIS step's compute runs, consumed by the next step's restores /

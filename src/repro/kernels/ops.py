@@ -81,6 +81,28 @@ def paged_attention_rows(
     return o.reshape(N, H, d)
 
 
+def mixed_attention_rows(
+    q, k_pages, v_pages, cu_q_lens, kv_lens, block_tables,
+    *, qb=8, window=None, softcap=None, use_kernel=False, interpret=False,
+):
+    """Packed mixed-batch layout wrapper: q (N,H,d) rows laid out by segment
+    (cu_q_lens (S+1,) row offsets; a decode row is a 1-token segment, a
+    prefill chunk a longer one), per-SEGMENT kv extents (S,) and block
+    tables (S,nb) -> (N,H,d). ``qb`` is the static q-block (pow2 >= the
+    longest segment) the kernel tiles queries with."""
+    N, H, d = q.shape
+    KV = k_pages.shape[2]
+    G = H // KV
+    qg = q.reshape(N, KV, G, d)
+    o = _pa.ragged_mixed_attention(
+        qg, k_pages, v_pages, cu_q_lens.astype(jnp.int32),
+        kv_lens.astype(jnp.int32), block_tables, qb=qb,
+        window=window, softcap=softcap, use_kernel=use_kernel,
+        interpret=interpret,
+    )
+    return o.reshape(N, H, d)
+
+
 def ssd(x, dt, A, Bm, Cm, h0=None, *, chunk=_ssd.DEFAULT_CHUNK, interpret=False):
     """Model-layout wrapper mirroring models.mamba.ssd_chunked.
 

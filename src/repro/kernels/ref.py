@@ -82,6 +82,37 @@ def paged_attention_ref(
     return jnp.einsum("nkgs,nskd->nkgd", p, vc).astype(q.dtype)
 
 
+def mixed_attention_ref(
+    q, k_pages, v_pages, cu_q_lens, kv_lens, block_tables,
+    *, window: Optional[int] = None, softcap: Optional[float] = None,
+):
+    """Mixed-batch (unified prefill+decode) oracle by per-token expansion.
+
+    q: (N,KV,G,d) flat packed rows; cu_q_lens: (S+1,) row offsets of each
+    segment; kv_lens: (S,) total keys each segment's *last* row attends
+    (= context length after the chunk); block_tables: (S,nb) per-segment page
+    ids. Row j of segment s (a prefill-chunk token, or the single row of a
+    decode segment) attends ``kv_lens[s] - q_len[s] + j + 1`` keys — exactly
+    the intra-chunk causal mask the Pallas kernel applies — so expanding to
+    per-row lengths and delegating to :func:`paged_attention_ref` is the
+    mixed kernel's ground truth by construction. Rows at/after
+    ``cu_q_lens[-1]`` are padding: they read (valid) garbage and are
+    discarded by the caller, like every packed padding row.
+    """
+    N = q.shape[0]
+    S = kv_lens.shape[0]
+    cu = cu_q_lens.astype(jnp.int32)
+    row = jnp.arange(N, dtype=jnp.int32)
+    seg = jnp.clip(jnp.searchsorted(cu, row, side="right") - 1, 0, S - 1)
+    q_len = cu[seg + 1] - cu[seg]
+    j = row - cu[seg]
+    lengths = jnp.maximum(kv_lens[seg] - q_len + j + 1, 1)
+    return paged_attention_ref(
+        q, k_pages, v_pages, lengths, block_tables[seg],
+        window=window, softcap=softcap,
+    )
+
+
 def ssd_ref(x, dt, A, Bm, Cm, h0=None):
     """Sequential (exact) SSD recurrence oracle.
 

@@ -37,7 +37,7 @@ Two capacity regimes compose:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence, Set
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.memory.block_allocator import (
@@ -111,6 +111,9 @@ class KVMemoryManager:
         self.swapped: Dict[int, SwapRecord] = {}
         self.last_restored: Dict[int, SwapRecord] = {}
         self.over_capacity_steps = 0
+        # mid-block COW adoptions recorded by match_prefix, drained into
+        # StepPlan.prefix_copies: (rid, src_block, dst_block, n_tokens)
+        self.pending_prefix_copies: List[Tuple[int, int, int, int]] = []
 
     # ------------------------------------------------------------- occupancy
     @property
@@ -298,33 +301,61 @@ class KVMemoryManager:
 
     def match_prefix(self, rid: int, tokens: Sequence[int],
                      max_tokens: Optional[int] = None, step: int = 0) -> int:
-        """Adopt the longest cached full-block prefix of ``tokens`` as rid's
-        table; returns matched tokens (0 on miss / cache disabled). At least
-        one token is always left uncached (``max_tokens``, default
-        ``len(tokens) - 1``) so the final prefill chunk still computes the
-        first output logits."""
+        """Adopt the longest cached prefix of ``tokens`` as rid's table;
+        returns matched tokens (0 on miss / cache disabled). Full blocks are
+        adopted in place (copy-on-write references); a **mid-block partial
+        tail** — a cached block whose first ``p < block_size`` tokens match —
+        is adopted by minting a fresh private block and recording a device
+        page-copy intent ``(rid, src_block, dst_block, n_tokens)`` in
+        ``pending_prefix_copies`` (the scheduler drains it into
+        ``StepPlan.prefix_copies``; the engine copies the page before any
+        other device write of the step). ``prefill_pos`` can therefore
+        resume at the exact matched token offset, not just block
+        boundaries. At least one token is always left uncached
+        (``max_tokens``, default ``len(tokens) - 1``) so the final prefill
+        chunk still computes the first output logits."""
         if self.prefix is None or rid in self.allocator.tables:
             return 0
-        limit = len(tokens) - 1 if max_tokens is None else max_tokens
-        bs = self.block_size
-        blocks = self.prefix.match(tokens, step=step,
-                                   max_blocks=max(0, limit) // bs)
-        if not blocks:
+        limit = max(0, len(tokens) - 1 if max_tokens is None else max_tokens)
+        blocks, partial = self.prefix.match_tokens(tokens, step=step,
+                                                   max_tokens=limit)
+        if not blocks and partial is None:
             return 0
-        matched = len(blocks) * bs
+        matched = len(blocks) * self.block_size
         self.allocator.adopt(rid, blocks, matched)
+        if partial is not None:
+            src, p = partial
+            try:
+                self._grow(rid, p)
+            except OutOfBlocks:
+                # pool too tight to mint the COW tail: keep what full blocks
+                # gave us (a partial-only match degrades back to a miss)
+                if not blocks:
+                    self.allocator.free(rid)
+                    return 0
+                return matched
+            dst = self.allocator.tables[rid].blocks[-1]
+            self.pending_prefix_copies.append((rid, src, dst, p))
+            matched += p
         return matched
+
+    def drain_prefix_copies(self) -> List[Tuple[int, int, int, int]]:
+        """Hand off the mid-block COW copy intents recorded since the last
+        drain: (rid, src_block, dst_block, n_tokens) per partial adoption."""
+        out, self.pending_prefix_copies = self.pending_prefix_copies, []
+        return out
 
     def probe_prefix(self, tokens: Sequence[int],
                      max_tokens: Optional[int] = None) -> int:
         """Read-only ``match_prefix``: tokens a future admission WOULD adopt
-        right now.  No LRU touch, no adoption — the one-step-ahead prefetch
-        planner prices re-adoption intents with this."""
+        right now (full blocks plus a mid-block partial tail).  No LRU
+        touch, no adoption — the one-step-ahead prefetch planner prices
+        re-adoption intents with this, so it must count exactly what
+        ``match_prefix`` will match."""
         if self.prefix is None:
             return 0
-        limit = len(tokens) - 1 if max_tokens is None else max_tokens
-        bs = self.block_size
-        return self.prefix.probe(tokens, max_blocks=max(0, limit) // bs) * bs
+        limit = max(0, len(tokens) - 1 if max_tokens is None else max_tokens)
+        return self.prefix.probe_tokens(tokens, max_tokens=limit)
 
     def insert_prefix(self, rid: int, tokens: Sequence[int], step: int = 0,
                       priority: int = 0) -> int:

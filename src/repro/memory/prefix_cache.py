@@ -11,9 +11,14 @@ The cache holds its OWN reference on every cached block (allocator
 ``incref``), so cached KV survives the inserting request. A later request
 whose prompt walks the same path *adopts* the matched block run as its
 table prefix (``BlockAllocator.adopt``) — zero prefill compute and zero HBM
-fill traffic for the matched tokens. Because matches are whole blocks and
-adopted runs carry no tail slack, the first uncached token always mints a
-fresh private block: shared pages are never written after insertion.
+fill traffic for the matched tokens. Matching resumes **mid-block**: after
+the fully shared run, ``match_tokens`` also matches a token-level prefix of
+the next cached block; the adopter gets a *fresh private* tail page plus a
+recorded copy intent (``(rid, src, dst, n_tokens)``, drained via
+``drain_prefix_copies``) that the engine executes as a device-side
+page-prefix copy before any step writes. Shared pages are never written
+after insertion — full blocks are shared by reference, and the partial tail
+is copy-on-write into the private page.
 
 Eviction: under ``OutOfBlocks`` pressure the memory manager reclaims
 *unreferenced leaves* — nodes whose block has refcount 1 (only the cache's
@@ -100,6 +105,77 @@ class PrefixCache:
             node = child
         self.stats.matched_blocks += len(blocks)
         return blocks
+
+    def match_tokens(self, tokens: Sequence[int], step: int = 0,
+                     max_tokens: Optional[int] = None,
+                     ) -> Tuple[List[int], Optional[Tuple[int, int]]]:
+        """Longest cached prefix measured in TOKENS, not blocks: the
+        full-block walk of :meth:`match` plus a **mid-block partial tail** —
+        the longest common token-prefix between the remaining (< block)
+        tokens and any child key at the stop node. Returns ``(blocks,
+        partial)`` where ``partial`` is ``(block_id, n_tokens)`` or None.
+
+        The partial block is NOT adoptable in place (its tail tokens differ
+        or are unwritten for this prompt): the caller copies the page and
+        owns the copy privately, so shared pages are still never scribbled.
+        """
+        bs = self.alloc.block_size
+        self.stats.lookups += 1
+        limit = len(tokens) if max_tokens is None else min(max_tokens, len(tokens))
+        node = self.root
+        blocks: List[int] = []
+        for i in range(limit // bs):
+            child = node.children.get(tuple(tokens[i * bs:(i + 1) * bs]))
+            if child is None:
+                break
+            child.last_access = step
+            blocks.append(child.block)
+            node = child
+        self.stats.matched_blocks += len(blocks)
+        rem = tuple(tokens[len(blocks) * bs:limit])
+        partial = None
+        if rem:
+            best, best_child = 0, None
+            for key, child in node.children.items():
+                p = 0
+                for a, b in zip(key, rem):
+                    if a != b:
+                        break
+                    p += 1
+                if p > best:
+                    best, best_child = p, child
+            if best_child is not None:
+                best_child.last_access = step
+                partial = (best_child.block, best)
+        return blocks, partial
+
+    def probe_tokens(self, tokens: Sequence[int],
+                     max_tokens: Optional[int] = None) -> int:
+        """Read-only :meth:`match_tokens`: cached tokens (full blocks + a
+        mid-block partial tail) a future admission would adopt, without
+        touching LRU timestamps or stats."""
+        bs = self.alloc.block_size
+        limit = len(tokens) if max_tokens is None else min(max_tokens, len(tokens))
+        node = self.root
+        matched = 0
+        for i in range(limit // bs):
+            child = node.children.get(tuple(tokens[i * bs:(i + 1) * bs]))
+            if child is None:
+                break
+            matched += bs
+            node = child
+        rem = tuple(tokens[matched:limit])
+        if rem:
+            best = 0
+            for key in node.children:
+                p = 0
+                for a, b in zip(key, rem):
+                    if a != b:
+                        break
+                    p += 1
+                best = max(best, p)
+            matched += best
+        return matched
 
     def probe(self, tokens: Sequence[int],
               max_blocks: Optional[int] = None) -> int:

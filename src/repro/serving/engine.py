@@ -244,54 +244,85 @@ class Engine:
         self.sched_cfg = sched_cfg
         self.trace = tracer if tracer is not None else NOOP
         self.scheduler = Scheduler(sched_cfg, model.cfg, tracer=self.trace)
-        self.scheduler.padded_len = max_len  # dense-gather padding extent
 
         if self.packed_mode:
             if self.attn_kernel == "paged":
                 use_pallas = jax.default_backend() == "tpu"
                 page = self.page_size
+                # the unified mixed-batch attention path: ONE compiled call
+                # serves decode rows and packed prefill chunks alike, driven
+                # by the plan's segment layout (cu_q_lens / kv_lens /
+                # seg_slots). ``qb`` — the pow2 q-block rows bucket — is
+                # static so the kernel tiles each segment's queries exactly.
                 self._packed = jax.jit(
-                    lambda p, c, t, s, pos, bt: packed_step(
+                    lambda p, c, t, s, pos, bt, cq, kl, ss, qb: packed_step(
                         model, p, c, t, s, pos,
-                        paged=PagedView(bt, page, use_kernel=use_pallas),
-                    )
+                        paged=PagedView(bt, page, use_kernel=use_pallas,
+                                        cu_q_lens=cq, kv_lens=kl,
+                                        seg_slots=ss, q_block=qb),
+                    ),
+                    static_argnums=(9,),
+                )
+                # mid-block prefix resume: batched copy-on-write page
+                # duplication (gather-then-scatter in ONE compiled call, so
+                # every source is read from the pre-copy array before any
+                # destination is written)
+                self._copy_pages = jax.jit(
+                    lambda cache, src, dst: {
+                        k: jax.tree.map(
+                            lambda l, a=_batch_axis(k): l.at[
+                                (slice(None),) * a + (dst,)
+                            ].set(jnp.take(l, src, axis=a)),
+                            cache[k],
+                        )
+                        for k in cache
+                    }
                 )
             else:
                 self._packed = jax.jit(
                     lambda p, c, t, s, pos: packed_step(model, p, c, t, s, pos)
                 )
-        self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(model.prefill)
-        # fused single-call slot movers: one compiled gather/scatter over the
-        # whole cache tree per swapped request (vs per-key dispatches)
-        self._gather_slot = jax.jit(
-            lambda cache, slot: {
-                k: _take_slot(cache[k], slot, _batch_axis(k)) for k in cache
-            }
-        )
-        self._scatter_slot = jax.jit(
-            lambda cache, part, slot: {
-                k: _put_slot(cache[k], part[k], slot, _batch_axis(k)) for k in cache
-            }
-        )
-        # jitted slot zero-reset for two-call re-prefills (slot reuse): the
-        # zeros tree is built inside the compiled call, not rebuilt per use
-        self._reset_slot = jax.jit(
-            lambda cache, slot: {
-                k: _put_slot(
-                    cache[k],
-                    jax.tree.map(
-                        lambda l: jnp.zeros_like(
-                            jax.lax.slice_in_dim(l, 0, 1, axis=_batch_axis(k))
-                        ),
+        else:
+            # per-arch decode/prefill entry points exist ONLY for the
+            # two-call (SSM/hybrid/encdec) path — attention-family archs run
+            # everything through the single packed_step call site
+            self._decode = jax.jit(model.decode_step)
+            self._prefill = jax.jit(model.prefill)
+            # jitted slot zero-reset for two-call re-prefills (slot reuse):
+            # the zeros tree is built inside the compiled call, not rebuilt
+            # per use
+            self._reset_slot = jax.jit(
+                lambda cache, slot: {
+                    k: _put_slot(
                         cache[k],
-                    ),
-                    slot,
-                    _batch_axis(k),
-                )
-                for k in cache
-            }
-        )
+                        jax.tree.map(
+                            lambda l: jnp.zeros_like(
+                                jax.lax.slice_in_dim(
+                                    l, 0, 1, axis=_batch_axis(k))
+                            ),
+                            cache[k],
+                        ),
+                        slot,
+                        _batch_axis(k),
+                    )
+                    for k in cache
+                }
+            )
+        if self.attn_kernel != "paged":
+            # fused single-call slot movers for dense swap traffic: one
+            # compiled gather/scatter over the whole cache tree per swapped
+            # request (the paged path moves pages via _gather/_scatter_pages)
+            self._gather_slot = jax.jit(
+                lambda cache, slot: {
+                    k: _take_slot(cache[k], slot, _batch_axis(k)) for k in cache
+                }
+            )
+            self._scatter_slot = jax.jit(
+                lambda cache, part, slot: {
+                    k: _put_slot(cache[k], part[k], slot, _batch_axis(k))
+                    for k in cache
+                }
+            )
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request) -> None:
@@ -349,6 +380,11 @@ class Engine:
         if plan.prefetch is not None:
             self.prefetch_log.append(plan.prefetch.coverage)
         t1 = tr.now() if tr.enabled else 0.0
+        # copy-on-write page duplication for mid-block prefix resumes MUST
+        # run before any other device write this step: sources are cached
+        # pages whose ids were valid at plan time, and neither swap traffic
+        # nor the compute scatter has touched the pool yet
+        self._apply_prefix_copies(plan)
         self._apply_swaps(plan)
         self._verify_landed(plan)
         t2 = tr.now() if tr.enabled else 0.0
@@ -394,6 +430,28 @@ class Engine:
             (bid, i * bs, min(bs, table.num_tokens - i * bs))
             for i, bid in enumerate(table.blocks)
         ]
+
+    def _apply_prefix_copies(self, plan: StepPlan) -> None:
+        """Materialize the plan's mid-block prefix-cache resumes: each entry
+        ``(rid, src_block, dst_block, n_tokens)`` copies a cached page whose
+        FIRST ``n_tokens`` match the admitted prompt into the fresh private
+        tail page the admission minted. Whole pages are copied (one batched
+        gather-then-scatter), which is safe: positions past ``n_tokens`` are
+        masked until the request's own prefill overwrites them, and shared
+        source pages are never written — copy-on-write, not adoption."""
+        if self.attn_kernel != "paged" or not plan.prefix_copies:
+            return
+        scratch = self._scratch_page
+        n = len(plan.prefix_copies)
+        m = _page_bucket(n)
+        src = np.full((m,), scratch, np.int32)
+        dst = np.full((m,), scratch, np.int32)
+        for i, (_rid, s, d, _p) in enumerate(plan.prefix_copies):
+            src[i] = s
+            dst[i] = d
+        self.cache = self._copy_pages(
+            self.cache, jnp.asarray(src), jnp.asarray(dst)
+        )
 
     def _apply_swaps(self, plan: StepPlan) -> None:
         """Execute the plan's swap traffic on the KV storage before the
@@ -634,9 +692,42 @@ class Engine:
             max_ctx = self._sync_block_mirror(plan)
             nb = self._nb_bucket(max_ctx)
             bt = jnp.asarray(self.block_mirror[:, :nb])
+            # segment layout for the unified mixed-batch attention call:
+            # the scheduler stamped cu_q_lens/cu_kv_lens on the plan in the
+            # SAME order the rows above were packed (decodes, then prefill
+            # segments), so the arrays ship verbatim — single source of
+            # truth shared with the sim's cost model. Padding segments are
+            # zero-width (q_len = kv_len = 0) and own the scratch slot.
+            s_real = nd + len(plan.prefill_segments)
+            kv_real = plan.kv_lens
+            sb = 8
+            while sb < s_real:
+                sb *= 2
+            cu_q = np.full((sb + 1,), plan.cu_q_lens[-1], np.int32)
+            cu_q[: s_real + 1] = plan.cu_q_lens
+            kv_lens = np.zeros((sb,), np.int32)
+            kv_lens[:s_real] = kv_real
+            seg_slots = np.full((sb,), self.n_slots, np.int32)
+            seg_slots[:nd] = plan.decode_slots
+            for i, seg in enumerate(plan.prefill_segments):
+                seg_slots[nd + i] = seg.slot
+            # static q-block: pow2 bucket of the longest segment so a
+            # decode-only step compiles with qb=1 while chunked prefills
+            # tile in blocks — (nb, sb, qb) are the only shape-bearing keys
+            qb = 1
+            max_q = int(max(np.diff(cu_q[: s_real + 1]), default=1))
+            while qb < max_q:
+                qb *= 2
+            assert int(cu_q[s_real]) == row, (
+                f"plan row layout mismatch: cu_q_lens end {cu_q[s_real]} "
+                f"!= packed rows {row}")
+            if nd:
+                assert np.array_equal(kv_lens[:nd], positions[:nd] + 1), (
+                    "decode kv_lens drifted from engine positions")
             logits, self.cache = self._packed(
                 self.params, self.cache, jnp.asarray(tokens), jnp.asarray(slots),
-                jnp.asarray(positions), bt,
+                jnp.asarray(positions), bt, jnp.asarray(cu_q),
+                jnp.asarray(kv_lens), jnp.asarray(seg_slots), qb,
             )
         else:
             logits, self.cache = self._packed(

@@ -143,6 +143,7 @@ def layer_ops(
     n_d: int,  # decode tokens (batch of decode requests)
     kv_d: int,  # total decode KV tokens (sum of contexts)
     packed: bool,
+    kv_block: int = 1,  # KV page size the paged kernel rounds reads up to
 ) -> List[Op]:
     """Ops of one layer in execution order (paper Fig 3 layer-by-layer)."""
     ops: List[Op] = []
@@ -180,10 +181,15 @@ def layer_ops(
             # FlashAttention prefill: causal, ~ctx/2 average span; K/V streamed once
             span = (prefill_ctx + max(prefill_ctx - n_p, 0)) / 2.0
             mm = [(n_p, hd_q, int(span) or 1), (n_p, int(span) or 1, hd_v)]
+            # unified mixed-batch kernel: the chunk reads its prefix+chunk KV
+            # ONCE, rounded up to whole pages (never once per chunk token),
+            # plus the chunk's own KV append — the same block-rounded bytes
+            # the engine's kernel streams
+            ctx_read = kv_tokens_touched([prefill_ctx], kv_block)
             ops.append(Op(f"{layer_name}.attn/p", "prefill",
                           [(m * H, k, n) for (m, k, n) in [mm[0]]] + [(mm[1][0] * H, mm[1][1], mm[1][2])],
                           weight_bytes=0.0,
-                          io_bytes=(prefill_ctx + n_p) * cfg.kv_bytes_per_token_layer,
+                          io_bytes=(ctx_read + n_p) * cfg.kv_bytes_per_token_layer,
                           vu_flops=6.0 * H * n_p * span))
         if n_d:
             # decode attention: heads batch into MXU rows (m = n_d*H)
@@ -236,6 +242,7 @@ def stage_ops(
     n_d: int,
     kv_d: int,
     packed: bool,
+    kv_block: int = 1,
 ) -> List[Op]:
     """Full model step: embed + all layers + LM head.
 
@@ -260,7 +267,8 @@ def stage_ops(
         if n_d:
             ops.append(embed(n_d, "decode"))
         for i, spec in enumerate(cfg.layer_specs):
-            ops.extend(layer_ops(cfg, spec, f"L{i}", n_p, prefill_ctx, n_d, kv_d, True))
+            ops.extend(layer_ops(cfg, spec, f"L{i}", n_p, prefill_ctx, n_d, kv_d, True,
+                                  kv_block=kv_block))
         # head: prefill needs only its last token's logits; decode tokens ride
         # the same weights (packed -> zero weight traffic for the decode op)
         if n_p:
@@ -274,7 +282,8 @@ def stage_ops(
         if n_p:
             ops.append(embed(n_p, "prefill"))
             for i, spec in enumerate(cfg.layer_specs):
-                ops.extend(layer_ops(cfg, spec, f"L{i}", n_p, prefill_ctx, 0, 0, False))
+                ops.extend(layer_ops(cfg, spec, f"L{i}", n_p, prefill_ctx, 0, 0, False,
+                                      kv_block=kv_block))
             ops.append(head(1, "prefill"))
         if n_d:
             ops.append(embed(n_d, "decode"))

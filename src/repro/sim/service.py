@@ -82,8 +82,10 @@ class _StageCostCache:
     BEOL size), bucketed to BUF_BUCKET for cacheability.
     """
 
-    def __init__(self, hw: Hardware, cfg: ModelConfig, mode: str, buffer_bytes: float):
+    def __init__(self, hw: Hardware, cfg: ModelConfig, mode: str, buffer_bytes: float,
+                 kv_block: int = 1):
         self.hw, self.cfg, self.mode, self.buffer = hw, cfg, mode, buffer_bytes
+        self.kv_block = kv_block
         self.cache: Dict[Tuple[int, int, int, int], Tuple[float, float]] = {}
 
     def cost(self, n_p: int, prefill_ctx: int, n_d: int, kv_d: int,
@@ -98,6 +100,7 @@ class _StageCostCache:
             r = simulate_stage(
                 self.hw, self.cfg, n_p, ctxs, self.mode,
                 prefill_ctx=ctx_b or n_p, prefetch_buffer=buf_b,
+                kv_block=self.kv_block,
             )
             self.cache[key] = (r.stage_time, r.hbm_bytes)
         return self.cache[key]
@@ -172,7 +175,8 @@ def simulate_service(
         cfg,
         tracer=tr,
     )
-    costs = _StageCostCache(hw, cfg, mode, buffer_bytes)
+    costs = _StageCostCache(hw, cfg, mode, buffer_bytes,
+                            kv_block=kv_block_size)
     dma = TransferEngine(hw)
 
     t = 0.0

@@ -111,6 +111,7 @@ def simulate_stage(
     mode: str,  # "serial" | "packed" | "packed_prefetch"
     prefill_ctx: Optional[int] = None,
     prefetch_buffer: Optional[float] = None,
+    kv_block: int = 1,  # KV page size the unified kernel rounds reads up to
 ) -> StageResult:
     n_d = len(decode_ctxs)
     kv_d = int(sum(decode_ctxs))
@@ -119,7 +120,7 @@ def simulate_stage(
     buffer_bytes = 0.0
     if mode == "packed_prefetch":
         buffer_bytes = hw.prefetch_buffer if prefetch_buffer is None else prefetch_buffer
-    ops = stage_ops(cfg, n_p, prefill_ctx, n_d, kv_d, packed)
+    ops = stage_ops(cfg, n_p, prefill_ctx, n_d, kv_d, packed, kv_block=kv_block)
     return _walk(hw, ops, buffer_bytes)
 
 

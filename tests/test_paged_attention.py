@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _compat import given, settings, st
 
 from repro.configs import get_config, reduce_config
 from repro.core.scheduler import SchedulerConfig
@@ -275,3 +276,172 @@ def test_engine_block_mirror_lifecycle():
     assert saw_nonidentity, "allocator ids never diverged from the slot map"
     for r in eng.scheduler.requests.values():
         assert len(r.output) == r.max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# unified mixed-batch kernel: parity vs the old per-token ragged path
+# ---------------------------------------------------------------------------
+
+
+def _mixed_case(data, st):
+    """Draw a random mixed batch: decode rows, prefill chunks, and dead
+    zero-width segments over a shuffled page pool with corrupted dead pages.
+    Returns everything both attention paths need plus the per-token
+    expansion the OLD per-row path consumes."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    KV = data.draw(st.sampled_from([1, 2]))
+    G = data.draw(st.sampled_from([1, 2, 4]))
+    d, page = 32, 8
+    n_seg = data.draw(st.integers(1, 4))
+    segs = []  # (q_len, kv_len)
+    for _ in range(n_seg):
+        kind = data.draw(st.sampled_from(["decode", "chunk", "chunk", "dead"]))
+        if kind == "decode":
+            segs.append((1, data.draw(st.integers(1, 40))))
+        elif kind == "chunk":
+            q_len = data.draw(st.integers(2, 6))
+            segs.append((q_len, data.draw(st.integers(q_len, 40))))
+        else:
+            segs.append((0, 0))
+    pad = data.draw(st.integers(0, 3))
+    window = data.draw(st.sampled_from([None, 5, 16]))
+    softcap = data.draw(st.sampled_from([None, 20.0]))
+
+    nb = max((-(-kv // page) for _, kv in segs), default=1) + 1
+    nb = max(nb, 2)
+    live_per_seg = [-(-kv // page) for _, kv in segs]
+    P = sum(live_per_seg) + 4  # + dead garbage pages
+    page_ids = rng.permutation(P)
+    dead = list(page_ids[sum(live_per_seg):])
+    tables = np.asarray(rng.choice(dead, size=(n_seg, nb)), np.int32)
+    off = 0
+    for s, n_live in enumerate(live_per_seg):
+        tables[s, :n_live] = page_ids[off:off + n_live]
+        off += n_live
+
+    pool_k = rng.standard_normal((P, page, KV, d)).astype(np.float32)
+    pool_v = rng.standard_normal((P, page, KV, d)).astype(np.float32)
+    pool_k[dead] = 999.0  # corrupted: any read would wreck the softmax
+    pool_v[dead] = -999.0
+
+    n_real = sum(q for q, _ in segs)
+    N = n_real + pad
+    q = rng.standard_normal((N, KV * G, d)).astype(np.float32)
+    cu = np.zeros((n_seg + 1,), np.int32)
+    cu[1:] = np.cumsum([q_len for q_len, _ in segs])
+    kv_lens = np.asarray([kv for _, kv in segs], np.int32)
+    # per-token expansion for the old per-row path
+    row_len, row_tab = [], []
+    for s, (q_len, kv_len) in enumerate(segs):
+        for j in range(q_len):
+            row_len.append(kv_len - q_len + j + 1)
+            row_tab.append(tables[s])
+    qb = 1
+    while qb < max((q for q, _ in segs), default=1):
+        qb *= 2
+    return dict(q=q, pool_k=pool_k, pool_v=pool_v, cu=cu, kv_lens=kv_lens,
+                tables=tables, qb=qb, window=window, softcap=softcap,
+                n_real=n_real, row_len=np.asarray(row_len, np.int32),
+                row_tab=np.asarray(row_tab, np.int32).reshape(len(row_tab), nb))
+
+
+@settings(deadline=None, max_examples=15)
+@given(data=st.data())
+def test_mixed_matches_per_token_path(data):
+    """Property parity: the unified mixed-batch attention (jnp oracle AND
+    Pallas kernel in interpret mode) equals the OLD per-token ragged path on
+    random decode/prefill mixes — shuffled non-contiguous tables, GQA,
+    window, softcap, zero-width segments, and corrupted dead pages that must
+    never be read."""
+    c = _mixed_case(data, st)
+    if c["n_real"] == 0:
+        return  # all segments dead: nothing to compare
+    expect = ops.paged_attention_rows(
+        jnp.asarray(c["q"][:c["n_real"]]), jnp.asarray(c["pool_k"]),
+        jnp.asarray(c["pool_v"]), jnp.asarray(c["row_len"]),
+        jnp.asarray(c["row_tab"]), window=c["window"], softcap=c["softcap"],
+    )
+    for kwargs in (dict(use_kernel=False), dict(interpret=True)):
+        got = ops.mixed_attention_rows(
+            jnp.asarray(c["q"]), jnp.asarray(c["pool_k"]),
+            jnp.asarray(c["pool_v"]), jnp.asarray(c["cu"]),
+            jnp.asarray(c["kv_lens"]), jnp.asarray(c["tables"]),
+            qb=c["qb"], window=c["window"], softcap=c["softcap"], **kwargs,
+        )
+        np.testing.assert_allclose(
+            np.asarray(got[:c["n_real"]]), np.asarray(expect),
+            rtol=2e-5, atol=2e-5,
+        )
+        assert np.all(np.isfinite(np.asarray(got)))
+
+
+def test_engine_mixed_swap_oversubscribed_token_identity():
+    """Unified path == dense debug fallback == serial reference under swap
+    preemption on a genuinely over-subscribed 16-page pool (total demand 21
+    pages): page round-trips through the host tier must not change a token."""
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(9)
+    # long decode phases so all three full contexts coexist: 40/36/32 tokens
+    # -> 10+9+8 = 27 pages of demand against a 16-page pool
+    lens, outs = [24, 20, 16], [16, 16, 16]
+    reqs = [
+        Request(rid=i, prompt=np.asarray(
+            jax.random.randint(jax.random.fold_in(rng, i), (lens[i],), 0,
+                               cfg.vocab_size)).tolist(),
+            max_new_tokens=outs[i])
+        for i in range(3)
+    ]
+    expected = {r.rid: _serial_reference(model, params, r) for r in reqs}
+
+    sched = dict(chunk_size=8, max_decode_batch=3,
+                 prefetch_buffer_bytes=1 << 20, max_concurrent_prefills=2,
+                 kv_block_size=4, num_kv_blocks=16, preemption="swap")
+    outs_by_kernel = {}
+    for kernel in ("paged", "dense"):
+        eng = Engine(model, params, SchedulerConfig(**sched), max_len=MAX_LEN,
+                     attn_kernel=kernel)
+        for r in reqs:
+            eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                               max_new_tokens=r.max_new_tokens))
+        eng.run(max_steps=400)
+        if kernel == "paged":
+            assert eng.scheduler.stats.swap_outs > 0, "pool never thrashed"
+        outs_by_kernel[kernel] = {
+            r.rid: eng.scheduler.requests[r.rid].output for r in reqs}
+
+    for r in reqs:
+        assert outs_by_kernel["paged"][r.rid] == expected[r.rid]
+        assert outs_by_kernel["paged"][r.rid] == outs_by_kernel["dense"][r.rid]
+
+
+def test_packed_jit_cache_bounded():
+    """Recompile regression: pow2 bucketing of (nb, n_segments, q_block)
+    keeps the packed jit cache from growing with workload shape — many steps
+    of shifting decode/prefill mixes compile only a handful of variants."""
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 SchedulerConfig(chunk_size=8, max_decode_batch=3,
+                                 prefetch_buffer_bytes=1 << 20,
+                                 max_concurrent_prefills=2, kv_block_size=4),
+                 max_len=MAX_LEN)
+    assert eng.attn_kernel == "paged"
+    rng = jax.random.PRNGKey(3)
+    lens = [3, 5, 7, 9, 11, 14, 17, 21]  # varied -> varied chunk tails
+    for i, n in enumerate(lens):
+        eng.submit(Request(rid=i, prompt=np.asarray(
+            jax.random.randint(jax.random.fold_in(rng, i), (n,), 0,
+                               cfg.vocab_size)).tolist(),
+            max_new_tokens=4 + (i % 3)))
+    eng.run(max_steps=400)
+    for i in range(len(lens)):
+        req = eng.scheduler.requests[i]
+        assert len(req.output) == req.max_new_tokens
+    assert eng.steps_run > 8
+    # compiled variants: one per (qb bucket) at fixed (N, nb, sb) here —
+    # far fewer than steps, and bounded regardless of how long we run
+    assert eng._packed._cache_size() <= 6
+    assert eng._packed._cache_size() < eng.steps_run

@@ -60,13 +60,23 @@ def test_radix_match_insert_basic():
 
 def test_match_leaves_last_token_uncached():
     """A fully cached prompt still computes its final token: the match is
-    capped so the finishing chunk emits the first output logits."""
+    capped so the finishing chunk emits the first output logits. With
+    mid-block resume the cap lands INSIDE the second block — the match
+    fast-forwards to 7 of 8 tokens via a copy-on-write tail page."""
     mem = _mem(bs=4)
     toks = list(range(200, 208))  # exactly 2 blocks
     mem.on_prefill(0, len(toks))
     mem.insert_prefix(0, toks)
     matched = mem.match_prefix(1, list(toks), max_tokens=len(toks) - 1)
-    assert matched == 4  # whole-prompt match dropped to the previous block
+    assert matched == 7  # 1 full block adopted + 3-token partial tail
+    t0, t1 = mem.allocator.tables[0], mem.allocator.tables[1]
+    # first block shared, tail block a PRIVATE copy (never the cached page)
+    assert t1.blocks[0] == t0.blocks[0]
+    assert t1.blocks[1] != t0.blocks[1]
+    assert mem.allocator.ref_count[t1.blocks[1]] == 1
+    # the engine drains one copy intent: cached tail -> private page, 3 toks
+    assert mem.drain_prefix_copies() == [(1, t0.blocks[1], t1.blocks[1], 3)]
+    assert mem.drain_prefix_copies() == []  # drained exactly once
 
 
 def test_insert_keeps_existing_nodes():
@@ -202,11 +212,28 @@ def test_refcount_invariants_under_churn(data):
             matched = mem.match_prefix(rid, toks, max_tokens=len(toks) - 1,
                                        step=step)
             t = mem.allocator.tables.get(rid)
+            copies = mem.drain_prefix_copies()
+            nf = matched // bs  # fully adopted blocks; a tail is a COW copy
             if matched:
-                # matched pages hold exactly the matched tokens (trie keys)
-                for i, b in enumerate(t.blocks):
+                # adopted pages hold exactly the matched tokens (trie keys)
+                for i, b in enumerate(t.blocks[:nf]):
                     assert content[b] == tuple(toks[i * bs:(i + 1) * bs]), (
                         "cache handed back a scribbled/mismatched page")
+            if matched % bs:
+                # mid-block resume: exactly one copy intent for this rid,
+                # source page carries the matched tokens, destination is a
+                # freshly minted private page (shared pages never scribbled)
+                assert len(copies) == 1
+                crid, src, dst, p = copies[0]
+                assert crid == rid and p == matched % bs
+                assert t.blocks[nf] == dst and len(t.blocks) == nf + 1
+                assert mem.allocator.ref_count[dst] == 1
+                assert content[src][:p] == tuple(toks[nf * bs:nf * bs + p])
+                # COW copy + this request's own prefill leave the private
+                # page holding this prompt's tokens
+                content[dst] = tuple(toks[nf * bs:(nf + 1) * bs])
+            else:
+                assert copies == []
             before = list(t.blocks) if t else []
             try:
                 mem.on_prefill(rid, len(toks) - matched)
@@ -402,6 +429,42 @@ def test_engine_prefix_cache_oversubscribed_identity(reduced_model, preemption):
         assert got == expected[r.rid], (
             f"{preemption} rid={r.rid}: {got} != serial {expected[r.rid]}")
     assert not eng.swap_store, "host tier still holds unrestored KV"
+
+
+def test_engine_mid_block_prefix_resume_token_identity(reduced_model):
+    """A shared prefix that ends INSIDE a page: the admission fast-forwards
+    to the exact matched token (3 full pages + 2 tokens here), the engine
+    copies the partial page copy-on-write, and greedy outputs still match
+    the serial reference token for token."""
+    cfg, model, params = reduced_model
+    rng = np.random.default_rng(17)
+    base = rng.integers(0, cfg.vocab_size, size=26).tolist()
+    tail = [(t + 1) % cfg.vocab_size for t in base[14:24]]  # diverges at 14
+    reqs = [
+        Request(rid=0, prompt=list(base), max_new_tokens=5),
+        Request(rid=1, prompt=base[:14] + tail, max_new_tokens=5),
+    ]
+    expected = {r.rid: _serial(model, params, r) for r in reqs}
+    eng = Engine(model, params,
+                 SchedulerConfig(chunk_size=16, max_decode_batch=3,
+                                 prefetch_buffer_bytes=1 << 20,
+                                 max_concurrent_prefills=2, kv_block_size=4,
+                                 enable_prefix_cache=True),
+                 max_len=MAX_LEN)
+    # run rid 0 to completion FIRST so its prompt is fully cached, then
+    # admit rid 1 whose shared prefix stops mid-page
+    eng.submit(Request(rid=0, prompt=list(reqs[0].prompt), max_new_tokens=5))
+    eng.run(max_steps=200)
+    eng.submit(Request(rid=1, prompt=list(reqs[1].prompt), max_new_tokens=5))
+    eng.run(max_steps=200)
+    stats = eng.scheduler.stats
+    assert stats.prefix_hit_tokens == 14, "mid-block tail not matched"
+    assert stats.prefix_hit_tokens % 4 == 2  # genuinely non-block-aligned
+    assert not eng.scheduler.mem.pending_prefix_copies, "copy intent leaked"
+    for r in reqs:
+        got = eng.scheduler.requests[r.rid].output
+        assert got == expected[r.rid], (
+            f"rid={r.rid}: {got} != serial {expected[r.rid]}")
 
 
 # ---------------------------------------------------------------------------
