@@ -209,6 +209,10 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
         print_fn(f"# merged robustness section into {json_path}")
         out_dir = os.path.dirname(os.path.abspath(json_path))
         chaos_trace = os.path.join(out_dir, "chaos_trace_engine.json")
+        # stamp the attribution totals so check_trace can enforce byte
+        # conservation (retry_refetch included) on the chaos trace too
+        eng_chaos.scheduler.ledger.record_totals(
+            chaos_tr, eng_chaos.attribution_aggregates())
         export_chrome(chaos_tr, chaos_trace)
         print_fn(f"# trace written: {chaos_trace}")
     return True

@@ -167,6 +167,15 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
         f"sim attn ledger {sim_same.metrics['attn_tokens_touched']} != "
         f"engine {s_eng.attn_tokens_touched}")
     assert sim_same.metrics["attn_tokens_padded"] == s_eng.attn_tokens_padded
+    # byte-attribution cross-check: the engine's ledger (debited in
+    # _apply_swaps / _issue_prefetch) and the sim's (debited in the pricing
+    # loop) must attribute identical bytes to every schedule-determined
+    # cause on every step, and the engine's ledger must conserve against
+    # its own aggregate counters
+    attr_errs = (eng_on.scheduler.ledger.compare(sim_same.ledger)
+                 + eng_on.scheduler.ledger.conservation_errors(
+                     eng_on.attribution_aggregates()))
+    assert not attr_errs, "attribution mismatch:\n" + "\n".join(attr_errs)
 
     # (b) prefix-cache adoption workload
     adopt_knobs = dict(chunk_size=16, max_decode_batch=4,
@@ -213,6 +222,11 @@ def run(print_fn=print, smoke: bool = False, json_path: Optional[str] = None):
         out_dir = os.path.dirname(os.path.abspath(json_path))
         eng_trace = os.path.join(out_dir, "overlap_trace_engine.json")
         sim_trace = os.path.join(out_dir, "overlap_trace_sim.json")
+        # the sim's totals instant is emitted by simulate_service itself;
+        # the engine's must be stamped before export so check_trace can
+        # enforce attribution conservation on both traces
+        eng_on.scheduler.ledger.record_totals(
+            eng_tr, eng_on.attribution_aggregates())
         export_chrome(eng_tr, eng_trace)
         export_chrome(sim_tr, sim_trace)
         print_fn(f"# traces written: {eng_trace} {sim_trace}")

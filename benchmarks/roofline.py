@@ -1,10 +1,10 @@
-"""Roofline analysis per (arch × shape) on the 16x16 mesh (EXPERIMENTS.md §Roofline).
+"""Roofline analysis per (arch × shape) on the 16x16 mesh (`docs/benchmarks.md`).
 
     compute term    = FLOPs_per_chip / peak_FLOP/s
     memory term     = HBM_bytes_per_chip / HBM_bw
     collective term = collective_bytes_per_chip / link_bw
 
-Methodology note (documented in EXPERIMENTS.md): XLA's cost_analysis counts
+Methodology note (documented in `docs/benchmarks.md`): XLA's cost_analysis counts
 while-loop (scan) bodies ONCE, so raw HLO flops/bytes under-report scanned
 layers by ~n_layers×[×microbatches]. FLOPs/HBM-bytes therefore come from the
 exact analytic op model (benchmarks/analytic.py); collective bytes come from
@@ -78,6 +78,40 @@ def analyze(rec: dict) -> dict:
     }
 
 
+def attribution_crosscheck(print_fn=print):
+    """Cross-check the analytic roofline against the per-step attribution
+    ledger: a small service run classifies every step from the SAME step
+    HBM/host byte quantities the ``repro.obs.ByteLedger`` debits, so the
+    ledger's lane totals must conserve against the run's aggregate
+    counters (``hbm_bytes_moved`` et al) and the per-step roofline
+    observations must cover every priced step."""
+    from repro.configs import get_config
+    from repro.obs.attribution import bytes_close
+    from repro.serving.request import Request
+    from repro.sim.hardware import TPUV6E
+    from repro.sim.service import simulate_service
+
+    cfg = get_config("llama3.1-8b")
+    r = simulate_service(
+        TPUV6E, cfg, workload=None, qps=1.0, mode="packed_prefetch",
+        chunk=256, max_decode_batch=8, kv_block_size=16,
+        requests=[Request(rid=i, prompt=[0] * 128, max_new_tokens=16,
+                          arrival_time=0.0) for i in range(4)],
+    )
+    led, roof = r.ledger, r.roofline
+    assert bytes_close(led.hbm_moved_bytes(), r.metrics["hbm_bytes_moved"]), (
+        f"ledger HBM traffic {led.hbm_moved_bytes():.0f} != aggregate "
+        f"{r.metrics['hbm_bytes_moved']:.0f}")
+    assert len(roof.steps) == r.steps, (
+        f"roofline classified {len(roof.steps)} steps, sim priced {r.steps}")
+    lanes = led.lane_totals(movers_only=True)
+    print_fn(
+        f"roofline_attr,steps={r.steps},hbm_mb={lanes['hbm']/1e6:.1f},"
+        f"host_mb={lanes['host_link']/1e6:.1f},beol_mb={lanes['beol']/1e6:.1f},"
+        f"compute_bound_frac={roof.bound_fraction('compute'):.2f},"
+        f"hbm_bound_frac={roof.bound_fraction('hbm'):.2f}")
+
+
 def run(print_fn=print):
     print_fn(
         "roofline,arch,shape,compute_ms,memory_ms,collective_ms,bound,"
@@ -98,6 +132,7 @@ def run(print_fn=print):
             f"{a['useful_ratio']:.2f},{a['roofline_frac']:.2f},{peak/2**30:.1f}"
         )
         rows.append((rec, a))
+    attribution_crosscheck(print_fn)
     return rows
 
 

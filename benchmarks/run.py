@@ -30,8 +30,8 @@ def main() -> None:
 
     from benchmarks import (chaos_bench, fig5_stage_latency, fig6_memory_sweep,
                             fig7_service_throughput, fig8_chunk_tradeoff,
-                            kernels_micro, overlap_bench, prefix_cache_bench,
-                            roofline)
+                            headline, kernels_micro, overlap_bench,
+                            prefix_cache_bench, roofline)
 
     kernels_json = os.path.join(args.json_dir, "BENCH_kernels.json")
     sections = [
@@ -55,6 +55,11 @@ def main() -> None:
         # workloads: token identity under chaos, clean ledger teardown,
         # engine/sim retry-counter agreement, degraded-mode recovery
         ("chaos", lambda: chaos_bench.run(smoke=args.smoke,
+                                          json_path=kernels_json)),
+        # paper figures-of-merit from the byte-attribution ledger: decode
+        # speedup vs serial, HBM bytes vs packing-only, roofline bound
+        # shares — the numbers tools/check_bench.py gates against baseline
+        ("headline", lambda: headline.run(smoke=args.smoke,
                                           json_path=kernels_json)),
         ("roofline", lambda: roofline.run()),
     ]

@@ -64,6 +64,12 @@ from repro.memory.prefetch_queue import (
     PrefetchQueue,
     PrefetchTransfer,
 )
+from repro.obs.attribution import (
+    ATTN_READ,
+    PREFIX_SAVED,
+    RETRY_REFETCH,
+    ByteLedger,
+)
 from repro.obs.trace import LANE_SCHED, NOOP
 from repro.robustness.degraded import DegradedModeController
 from repro.robustness.faults import FaultInjector, FaultPlan, RetryPolicy
@@ -469,6 +475,13 @@ class Scheduler:
         self.swapped: List[Request] = []  # swap-out order (oldest first)
         self.requests: Dict[int, Request] = {}
         self.stats = SchedStats()
+        # per-step cause x lane byte attribution. Schedule-determined causes
+        # (attn_read / prefix_saved / retry_refetch) are debited HERE, once,
+        # by the shared scheduler; each backend adds its own pricing-side
+        # causes (swap traffic, fills, staged prefetch) on its own ledger
+        # wiring — equality of the shared causes is then a genuine
+        # engine==sim cross-check, not a tautology.
+        self.ledger = ByteLedger()
 
     # ------------------------------------------------------------------ API
     def add_request(self, req: Request) -> None:
@@ -572,8 +585,10 @@ class Scheduler:
             req.prefill_pos = matched
             self.stats.prefix_hits += 1
             self.stats.prefix_hit_tokens += matched
-            self.stats.prefix_fill_bytes_saved += prefix_fill_bytes_saved(
+            saved = prefix_fill_bytes_saved(
                 matched, self.mem.kv_bytes_per_token)
+            self.stats.prefix_fill_bytes_saved += saved
+            self.ledger.debit(self.stats.steps, PREFIX_SAVED, saved)
             if self.trace.enabled:
                 self.trace.request_event(req.rid, "adopt",
                                          step=self.stats.steps,
@@ -795,7 +810,14 @@ class Scheduler:
         if self._deadlines:
             self._expire_deadlines(now)
         if self.injector.enabled:
+            # attribute exactly the wasted bytes the fail pass charges
+            # (bytes_refetched), not the re-attempt list: ``retried`` also
+            # resurfaces deferred attempts that re-send nothing
+            before = self.prefetch_queue.stats.bytes_refetched
             plan.retried = self.prefetch_queue.retry_tick(step)
+            wasted = self.prefetch_queue.stats.bytes_refetched - before
+            if wasted > 0:
+                self.ledger.debit(step, RETRY_REFETCH, wasted)
         if self.degraded is not None:
             qs = self.prefetch_queue.stats
             attempts = qs.issued + qs.transfer_retries
@@ -1021,6 +1043,8 @@ class Scheduler:
             max_row = max(kv_lens, default=1)
             rows = len(plan.decode_slots) + plan.total_prefill_tokens
             self.stats.attn_tokens_touched += touched
+            self.ledger.debit(self.stats.steps, ATTN_READ,
+                              touched * self.mem.kv_bytes_per_token)
             # baseline at the same block granularity as `touched`: what a
             # rectangular gather over the paged pool would read — every row
             # padded to the step's longest context — so savings are never

@@ -101,6 +101,10 @@ def main():
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="dump the full metrics summary as NaN-safe JSON "
                          "(non-finite values serialize as null)")
+    ap.add_argument("--attribution-json", default=None, metavar="PATH",
+                    help="dump the per-step byte-attribution ledger (cause x "
+                         "lane x step, plus totals) as NaN-safe JSON "
+                         "(docs/observability.md)")
     # robustness layer (docs/robustness.md)
     ap.add_argument("--fault-plan", default=None, metavar="PATH",
                     help="JSON FaultPlan to inject deterministic transfer "
@@ -201,11 +205,18 @@ def main():
                   prefetch_stats=eng.scheduler.prefetch_queue.stats,
                   registry=reg)
     if args.trace_out:
+        # stamp the run-total attribution instant so tools/check_trace.py
+        # can enforce byte conservation on the exported trace
+        eng.scheduler.ledger.record_totals(tracer, eng.attribution_aggregates())
         export_chrome(tracer, args.trace_out)
         print(f"[launch.serve] trace written to {args.trace_out}")
     if args.metrics_json:
         dump_json(args.metrics_json, m)
         print(f"[launch.serve] metrics written to {args.metrics_json}")
+    if args.attribution_json:
+        dump_json(args.attribution_json, eng.scheduler.ledger.as_dict())
+        print(f"[launch.serve] attribution ledger written to "
+              f"{args.attribution_json}")
     # savings are *realized* only when the ragged paged path actually ran;
     # otherwise the number is what it would have saved
     ragged = eng.packed_mode and eng.attn_kernel == "paged"

@@ -110,6 +110,11 @@ class KVMemoryManager:
         self.tiers = TierManager(beol_bytes, block_bytes_layer, policy=beol_policy)
         self.swapped: Dict[int, SwapRecord] = {}
         self.last_restored: Dict[int, SwapRecord] = {}
+        # authoritative host-link swap traffic, accumulated at the moment
+        # pages actually detach/attach — the attribution ledger's swap
+        # causes must reproduce these exactly (conservation invariant)
+        self.swap_out_bytes_total = 0
+        self.swap_in_bytes_total = 0
         self.over_capacity_steps = 0
         # mid-block COW adoptions recorded by match_prefix, drained into
         # StepPlan.prefix_copies: (rid, src_block, dst_block, n_tokens)
@@ -160,6 +165,12 @@ class KVMemoryManager:
         reg.gauge("prefix_cached_blocks", "blocks",
                   "blocks currently held by the radix prefix cache").set(
                       float(self.prefix_cached_blocks))
+        reg.counter("swap_out_bytes", "bytes",
+                    "host-link bytes spilled by KV swap-outs").inc(
+                        float(self.swap_out_bytes_total))
+        reg.counter("swap_in_bytes", "bytes",
+                    "host-link bytes restored by KV swap-ins").inc(
+                        float(self.swap_in_bytes_total))
 
     def tokens_of(self, rid: int) -> int:
         t = self.allocator.tables.get(rid)
@@ -397,6 +408,7 @@ class KVMemoryManager:
         record = self.allocator.detach(rid)
         rec = SwapRecord(record=record, tokens=record.table.num_tokens)
         self.swapped[rid] = rec
+        self.swap_out_bytes_total += self.swap_host_bytes(rid)
         return record.spilled_tokens(self.block_size)
 
     def swap_in_extra_blocks(self, rid: int) -> int:
@@ -418,6 +430,7 @@ class KVMemoryManager:
             if not self._reclaim_for(len(rec.record.spilled_indices)):
                 raise
             self.allocator.attach(rec.record)
+        self.swap_in_bytes_total += self.swap_host_bytes(rid)
         del self.swapped[rid]
         self.last_restored[rid] = rec
         return rec.record.spilled_tokens(self.block_size)

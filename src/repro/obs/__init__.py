@@ -11,8 +11,27 @@ Shared by the serving engine and the service simulator (see
     ``serving.metrics.summarize`` is a thin view over it
     (``repro.obs.registry``);
   * ``json_safe`` / ``dump_json`` — NaN-safe JSON for every metrics/trace
-    export.
+    export;
+  * ``ByteLedger`` / ``RooflineTracker`` — per-step cause x lane byte
+    attribution with a checked conservation invariant, and per-step
+    compute/HBM/host-link roofline classification
+    (``repro.obs.attribution``).
 """
+from repro.obs.attribution import (
+    AGG_RULES,
+    ATTN_READ,
+    CAUSE_LANE,
+    CAUSES,
+    COMPARED_CAUSES,
+    KV_FILL,
+    PREFETCH_STAGE,
+    PREFIX_SAVED,
+    RETRY_REFETCH,
+    SWAP_IN,
+    SWAP_OUT,
+    ByteLedger,
+    RooflineTracker,
+)
 from repro.obs.perfetto import dump_json, export_chrome, json_safe, to_chrome
 from repro.obs.registry import (
     Counter,
@@ -24,7 +43,20 @@ from repro.obs.registry import (
 from repro.obs.trace import NOOP, NoopTracer, TraceEvent, TraceRecorder
 
 __all__ = [
+    "AGG_RULES",
+    "ATTN_READ",
+    "ByteLedger",
+    "CAUSE_LANE",
+    "CAUSES",
+    "COMPARED_CAUSES",
     "Counter",
+    "KV_FILL",
+    "PREFETCH_STAGE",
+    "PREFIX_SAVED",
+    "RETRY_REFETCH",
+    "RooflineTracker",
+    "SWAP_IN",
+    "SWAP_OUT",
     "Gauge",
     "Histogram",
     "MetricCollision",

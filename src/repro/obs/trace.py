@@ -58,10 +58,11 @@ LANE_HOST_LINK = "host_link"
 LANE_HBM_FILL = "hbm_fill"
 LANE_PREFETCH_STAGE = "prefetch_stage"
 LANE_QUEUE = "prefetch_queue"
+LANE_ATTRIBUTION = "attribution"
 PIPELINE_LANES = (
     LANE_STEP, LANE_SCHED, LANE_COMPUTE, LANE_STALL_SYNC,
     LANE_STALL_PREFETCH, LANE_HOST_LINK, LANE_HBM_FILL,
-    LANE_PREFETCH_STAGE, LANE_QUEUE,
+    LANE_PREFETCH_STAGE, LANE_QUEUE, LANE_ATTRIBUTION,
 )
 
 # request lifecycle transitions -> the state span they open (None = closed).

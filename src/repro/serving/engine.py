@@ -57,6 +57,11 @@ from repro.core.packed_step import PagedView, packed_step, supports_packed
 from repro.core.scheduler import Scheduler, SchedulerConfig, StepPlan
 from repro.memory.prefetch_queue import ADOPT, SWAP_IN
 from repro.models.model import Model
+from repro.obs.attribution import (
+    PREFETCH_STAGE as ATTR_PREFETCH_STAGE,
+    SWAP_IN as ATTR_SWAP_IN,
+    SWAP_OUT as ATTR_SWAP_OUT,
+)
 from repro.obs.trace import (
     LANE_COMPUTE,
     LANE_HOST_LINK,
@@ -368,6 +373,26 @@ class Engine:
                           float(self.scheduler.mem.allocator.peak_used_blocks))
         if self.scheduler.injector.enabled:
             self.scheduler.injector.register_metrics(reg)
+        self.scheduler.ledger.register_metrics(reg)
+
+    def attribution_aggregates(self) -> Dict[str, float]:
+        """The engine's independently accumulated byte counters, keyed by
+        the ``repro.obs.attribution.AGG_RULES`` names the conservation
+        checker maps onto ledger causes. Feed to
+        ``ByteLedger.record_totals`` / ``conservation_errors``."""
+        sched = self.scheduler
+        mem = sched.mem
+        return {
+            "attn_read_bytes": float(sched.stats.attn_tokens_touched
+                                     * mem.kv_bytes_per_token),
+            "prefix_saved_bytes": float(sched.stats.prefix_fill_bytes_saved),
+            "swap_out_bytes": float(mem.swap_out_bytes_total),
+            "swap_in_bytes": float(mem.swap_in_bytes_total),
+            "swapped_bytes": float(mem.swap_out_bytes_total
+                                   + mem.swap_in_bytes_total),
+            "retry_refetch_bytes": float(
+                sched.prefetch_queue.stats.bytes_refetched),
+        }
 
     # ----------------------------------------------------------------- steps
     def step(self, now: float = 0.0) -> Optional[StepPlan]:
@@ -398,6 +423,10 @@ class Engine:
         # host->device copies ride under it
         self._issue_prefetch(plan)
         self.scheduler.complete_step(plan, now)
+        # emit the step's attribution instant at the same point in the
+        # event stream as the sim (right after complete_step), so the two
+        # backends' sched sequences stay position-aligned for --compare
+        self.scheduler.ledger.record_step(tr, plan.step)
         if tr.enabled:
             t4 = tr.now()
             step = self.steps_run
@@ -465,6 +494,17 @@ class Engine:
         stay token-identical. Dense mode moves whole slot rows. Outs run
         first so a swap-in may reuse just-freed pages/slots within the same
         step."""
+        # byte attribution: debit the host-link swap traffic at apply time,
+        # from the memory manager's own spill records — independent of the
+        # sim's pricing-loop debits, so their per-step equality (checked by
+        # check_trace --compare) is a genuine cross-check
+        led = self.scheduler.ledger
+        for rid, _slot in plan.swapped_out:
+            led.debit(plan.step, ATTR_SWAP_OUT,
+                      self.scheduler.mem.swap_host_bytes(rid))
+        for rid, _slot in plan.swapped_in:
+            led.debit(plan.step, ATTR_SWAP_IN,
+                      self.scheduler.mem.restored_host_bytes(rid))
         if self.attn_kernel == "paged":
             mem = self.scheduler.mem
             scratch = self._scratch_page
@@ -594,6 +634,11 @@ class Engine:
                         self._staged[t.rid] = jax.tree.map(jnp.asarray, saved)
                     else:
                         self._staged[t.rid] = jax.tree.map(jnp.asarray, entry)
+                    # attribution: these host->device bytes moved ahead of
+                    # their consuming step (ADOPT moves nothing; a re-land
+                    # over an intact staged copy moves nothing new)
+                    self.scheduler.ledger.debit(
+                        plan.step, ATTR_PREFETCH_STAGE, t.nbytes)
             elif t.kind == ADOPT:
                 q.attempt_land(t, plan.step)
 

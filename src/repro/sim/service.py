@@ -47,6 +47,13 @@ from repro.configs.base import ModelConfig
 from repro.core.scheduler import Scheduler, SchedulerConfig
 from repro.memory.prefetch_queue import SWAP_IN as PF_SWAP_IN
 from repro.memory.transfers import TransferEngine
+from repro.obs.attribution import (
+    KV_FILL,
+    PREFETCH_STAGE,
+    SWAP_IN,
+    SWAP_OUT,
+    RooflineTracker,
+)
 from repro.obs.registry import MetricsRegistry
 from repro.obs.trace import (
     LANE_COMPUTE,
@@ -72,6 +79,10 @@ class ServiceResult:
     metrics: Dict[str, float]
     steps: int
     sim_time: float
+    # per-step byte attribution (repro.obs.ByteLedger) and roofline
+    # classification (repro.obs.RooflineTracker) for the run
+    ledger: Optional[object] = None
+    roofline: Optional[object] = None
 
 
 class _StageCostCache:
@@ -193,6 +204,8 @@ def simulate_service(
     # against: fully-serial (compute, then every host transfer at link
     # speed) vs perfectly-overlapped (max of the two, per step)
     queue = sched.prefetch_queue
+    ledger = sched.ledger  # shared causes debited inside next_step
+    roof = RooflineTracker()
     serial_s = 0.0
     overlap_bound_s = 0.0
     compute_s = 0.0
@@ -232,7 +245,9 @@ def simulate_service(
                             step=steps, bytes=pending_b)
             serial_s += dt
             overlap_bound_s += dt
+            roof.observe(plan.step, 0.0, 0.0, dt, dt, tracer=tr, ts=t)
             sched.complete_step(plan, now=t)
+            ledger.record_step(tr, plan.step, ts=t)
             steps += 1
             continue
         pf = plan.prefetch
@@ -344,6 +359,19 @@ def simulate_service(
         hbm_saved += min(retained, step_hbm)
         swapped_bytes += step_swap_b
         fills_moved += report.earned_fill_bytes
+        # byte attribution: debit exactly the quantities the aggregate
+        # accumulators above saw, per cause — conservation (ledger totals ==
+        # aggregates) then holds identically, and check_trace re-verifies it
+        # on the exported events
+        ledger.debit(plan.step, KV_FILL, max(0.0, step_hbm - retained))
+        ledger.debit(plan.step, SWAP_OUT, swap_out_b)
+        ledger.debit(plan.step, SWAP_IN, swap_in_demand)
+        ledger.debit(plan.step, PREFETCH_STAGE, report.earned_fill_bytes)
+        # roofline: which of the three service times dominated this step's
+        # wall — compute, HBM streaming, or host-link transfer demand
+        roof.observe(plan.step, step_t, step_hbm / dma.hbm_stream_bw,
+                     (swap_out_b + swap_in_demand) / host_bw_eff, dt,
+                     tracer=tr, ts=t)
         if pf is not None and pf.total_tokens > 0 and pf.kv_bytes_per_token_layer:
             want_step = pf.total_tokens * pf.kv_bytes_per_token_layer
             kv_want += want_step
@@ -358,6 +386,7 @@ def simulate_service(
         for rid in plan.finishing_rids:
             sched.requests[rid].output.append(0)
         sched.complete_step(plan, now=t)
+        ledger.record_step(tr, plan.step, ts=t)
         steps += 1
 
     reg = MetricsRegistry()
@@ -385,10 +414,29 @@ def simulate_service(
     sched.mem.register_metrics(reg)
     if sched.injector.enabled:
         sched.injector.register_metrics(reg)
+    ledger.register_metrics(reg)
+    roof.register_metrics(reg)
+    aggregates = {
+        "swapped_bytes": swapped_bytes,
+        "hbm_bytes_moved": hbm_moved,
+        "prefetch_fill_bytes": fills_moved,
+        "swap_out_bytes": float(sched.mem.swap_out_bytes_total),
+        "swap_in_bytes": float(sched.mem.swap_in_bytes_total),
+        "attn_read_bytes": float(sched.stats.attn_tokens_touched
+                                 * sched.mem.kv_bytes_per_token),
+        "prefix_saved_bytes": float(sched.stats.prefix_fill_bytes_saved),
+        "retry_refetch_bytes": float(queue.stats.bytes_refetched),
+    }
+    errs = ledger.conservation_errors(aggregates)
+    if errs:
+        raise AssertionError("attribution conservation violated:\n  "
+                             + "\n  ".join(errs))
+    ledger.record_totals(tr, aggregates, ts=t)
     m = summarize(sched.requests.values(), horizon=max(t, 1e-9),
                   sched_stats=sched.stats, chunk_size=chunk,
                   prefetch_stats=queue.stats, registry=reg)
-    return ServiceResult(metrics=m, steps=steps, sim_time=t)
+    return ServiceResult(metrics=m, steps=steps, sim_time=t,
+                         ledger=ledger, roofline=roof)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,431 @@
+"""Byte-attribution ledger (repro.obs.attribution) + its trace checker.
+
+The observability tentpole's guarantees:
+
+  * **conservation** — every cause the ledger attributes sums back to the
+    independently accumulated aggregate counters (``AGG_RULES``), per run
+    and per step, property-tested over random packed/swap/prefetch/chaos
+    schedules on the simulator;
+  * **engine == sim** — the schedule-determined causes are debited
+    identically by the real engine and the analytical simulator for
+    identical scheduler knobs (``ByteLedger.compare``);
+  * **checkability** — exported traces pass ``tools/check_trace.py``'s
+    attribution pass, a doctored trace FAILS it (a checker that cannot
+    fail checks nothing), and the checker's import-free mirrors of the
+    cause/aggregate tables match the library's single source of truth.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.configs.reduced import dropless
+from repro.models import build_model
+from repro.obs import export_chrome, TraceRecorder
+from repro.obs.attribution import (
+    AGG_RULES,
+    ATTN_READ,
+    CAUSE_LANE,
+    CAUSES,
+    KV_FILL,
+    SWAP_IN,
+    SWAP_OUT,
+    ByteLedger,
+    RooflineTracker,
+    bytes_close,
+)
+from repro.obs.trace import LANE_ATTRIBUTION
+from repro.robustness import FaultPlan
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+from repro.serving.workload import shared_prefix_requests
+from repro.sim.hardware import TPUV6E
+from repro.sim.service import simulate_service
+
+from _compat import given, settings, st
+
+REPO = Path(__file__).resolve().parent.parent
+CHECKER = REPO / "tools" / "check_trace.py"
+MAX_LEN = 64
+
+
+def run_checker(*args):
+    return subprocess.run([sys.executable, str(CHECKER)]
+                          + [str(a) for a in args],
+                          capture_output=True, text=True)
+
+
+# ---------------------------------------------------------------------------
+# ledger unit semantics (pure, no jax)
+# ---------------------------------------------------------------------------
+
+def test_debit_validates_cause_and_sign():
+    led = ByteLedger()
+    with pytest.raises(ValueError, match="unknown attribution cause"):
+        led.debit(0, "typo_cause", 1.0)
+    with pytest.raises(ValueError, match="negative"):
+        led.debit(0, ATTN_READ, -1.0)
+    led.debit(0, ATTN_READ, 0.0)  # zero debit: dropped, no empty step record
+    assert led.steps() == []
+    led.debit(3, ATTN_READ, 64.0)
+    led.debit(3, SWAP_OUT, 32.0)
+    led.debit(5, SWAP_IN, 32.0)
+    assert led.steps() == [3, 5]
+    assert led.totals()[ATTN_READ] == 64.0
+    assert led.step_causes(3) == {ATTN_READ: 64.0, SWAP_OUT: 32.0}
+
+
+def test_lane_totals_and_hbm_identity():
+    led = ByteLedger()
+    led.debit(0, KV_FILL, 100.0)
+    led.debit(0, SWAP_OUT, 10.0)
+    led.debit(1, SWAP_IN, 10.0)
+    led.debit(1, ATTN_READ, 1000.0)  # demand, not a mover
+    lanes = led.lane_totals(movers_only=True)
+    assert lanes == {"hbm": 100.0, "host_link": 20.0, "beol": 0.0}
+    assert led.lane_totals()["hbm"] == 1100.0
+    assert led.hbm_moved_bytes() == 120.0
+
+
+def test_conservation_errors_catch_mismatch_and_typo():
+    led = ByteLedger()
+    led.debit(0, SWAP_OUT, 50.0)
+    led.debit(1, SWAP_IN, 50.0)
+    assert led.conservation_errors({"swapped_bytes": 100.0}) == []
+    errs = led.conservation_errors({"swapped_bytes": 101.5})
+    assert errs and "conservation violated" in errs[0]
+    errs = led.conservation_errors({"swaped_bytes": 100.0})  # typo
+    assert errs and "unknown aggregate" in errs[0]
+
+
+def test_compare_flags_per_step_divergence():
+    a, b = ByteLedger(), ByteLedger()
+    for led in (a, b):
+        led.debit(0, ATTN_READ, 64.0)
+        led.debit(2, SWAP_OUT, 16.0)
+    assert a.compare(b) == []
+    b.debit(2, SWAP_OUT, 4.0)  # sim attributes 4 extra bytes on step 2
+    errs = a.compare(b)
+    assert len(errs) == 1 and "step 2" in errs[0] and "swap_out" in errs[0]
+    # non-compared (backend-specific) causes never diverge the check
+    b.debit(7, KV_FILL, 999.0)
+    assert len(a.compare(b)) == 1
+
+
+def test_record_totals_rejects_unverifiable_aggregate():
+    led = ByteLedger()
+    tr = TraceRecorder("t", manual_clock=True)
+    with pytest.raises(ValueError, match="unknown aggregate"):
+        led.record_totals(tr, {"not_an_aggregate": 1.0})
+
+
+def test_roofline_bound_classification():
+    roof = RooflineTracker()
+    r = roof.observe(0, compute_t=2.0, hbm_t=1.0, host_t=0.5, wall_t=2.0)
+    assert r.bound == "compute" and r.utilization("hbm") == 0.5
+    roof.observe(1, compute_t=0.1, hbm_t=0.2, host_t=3.0, wall_t=3.0)
+    assert roof.bound_fraction("compute") == 0.5
+    assert roof.bound_fraction("host_link") == 0.5
+    # issued-ahead transfers can land more bytes than one wall: clamp
+    assert roof.observe(2, 0.0, 10.0, 0.0, 1.0).utilization("hbm") == 1.0
+
+
+def test_checker_mirrors_match_library():
+    """tools/check_trace.py is import-free by design; its private copies of
+    the cause/aggregate tables must track the library's single source of
+    truth or the CI gate silently diverges from the code."""
+    spec = importlib.util.spec_from_file_location("check_trace", CHECKER)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert tuple(mod.ATTR_CAUSES) == tuple(CAUSES)
+    assert {k: tuple(v) for k, v in mod.ATTR_AGG_RULES.items()} \
+        == {k: tuple(v) for k, v in AGG_RULES.items()}
+    assert mod.ATTR_LANE == LANE_ATTRIBUTION
+    assert set(AGG_RULES) and all(
+        c in CAUSE_LANE for v in AGG_RULES.values() for c in v)
+
+
+# ---------------------------------------------------------------------------
+# property: sim conservation over random packed/swap/prefetch/chaos schedules
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mode=st.sampled_from(["packed", "packed_prefetch"]),
+    preemption=st.sampled_from(["swap", "recompute"]),
+    n_reqs=st.integers(min_value=2, max_value=6),
+    prompt=st.integers(min_value=32, max_value=192),
+    out=st.integers(min_value=4, max_value=24),
+    cap_frac=st.floats(min_value=0.3, max_value=2.0),
+    prefix=st.booleans(),
+    fail_rate=st.sampled_from([0.0, 0.0, 0.25]),
+)
+def test_sim_conservation_property(mode, preemption, n_reqs, prompt, out,
+                                   cap_frac, prefix, fail_rate):
+    """Any schedule the sim can produce — packing, swap-thrash, prefix
+    adoption, async prefetch, transfer chaos — must conserve: per-step
+    debits reproduce the cause totals, cause totals reproduce the aggregate
+    counters. (simulate_service raises internally on violation; the
+    assertions here re-check the public surface.)"""
+    cfg = get_config("llama3.1-8b")
+    if prefix:
+        reqs = shared_prefix_requests(n=n_reqs, shared_len=prompt,
+                                      unique_len=max(8, prompt // 4),
+                                      max_new_tokens=out, jitter=2, seed=11,
+                                      vocab_size=cfg.vocab_size)
+    else:
+        reqs = [Request(rid=i, prompt=[0] * prompt, max_new_tokens=out,
+                        arrival_time=0.0) for i in range(n_reqs)]
+    cap = max(64, int(cap_frac * n_reqs * prompt)) if preemption == "swap" \
+        else None
+    plan = (FaultPlan(seed=5, fail_rate=fail_rate) if fail_rate else None)
+    r = simulate_service(
+        TPUV6E, cfg, workload=None, qps=1.0, mode=mode, chunk=64,
+        max_decode_batch=4, kv_block_size=8, kv_capacity_tokens=cap,
+        preemption=preemption, enable_prefix_cache=prefix,
+        fault_plan=plan, max_transfer_retries=2,
+        requests=reqs,
+    )
+    led, roof = r.ledger, r.roofline
+    assert led is not None and roof is not None
+    # the run-total HBM identity, from the public view
+    assert bytes_close(led.hbm_moved_bytes(), r.metrics["hbm_bytes_moved"])
+    # per-step records cover exactly the steps that moved bytes, and the
+    # roofline classified every priced step
+    assert len(roof.steps) == r.steps
+    assert sum(f for f in (roof.bound_fraction(b) for b in
+                           ("compute", "hbm", "host_link"))) == \
+        pytest.approx(1.0)
+    per_step = led.per_step()
+    for rec in per_step:
+        assert all(v >= 0 for k, v in rec.items() if k != "step")
+    # as_dict round-trips through JSON (the --attribution-json surface)
+    d = json.loads(json.dumps(led.as_dict()))
+    assert d["totals"].keys() == {c: None for c in CAUSES}.keys()
+    assert bytes_close(sum(d["lane_moved"].values()),
+                       sum(v for c, v in led.totals().items()
+                           if c in ("kv_fill", "swap_out", "swap_in",
+                                    "prefetch_stage", "retry_refetch")))
+
+
+# ---------------------------------------------------------------------------
+# engine == sim on real runs (reduced model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_llama():
+    cfg = dropless(reduce_config(get_config("llama3.1-8b")))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+ENGINE_KNOBS = dict(chunk_size=16, max_decode_batch=3,
+                    prefetch_buffer_bytes=0, max_concurrent_prefills=2,
+                    preemption="swap", kv_block_size=4)
+
+
+def _engine_run(model, params, cfg, reqs, tracer=None, **knobs):
+    from repro.core.scheduler import SchedulerConfig
+
+    eng = Engine(model, params,
+                 SchedulerConfig(**{**ENGINE_KNOBS, **knobs}),
+                 max_len=MAX_LEN, tracer=tracer)
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                           max_new_tokens=r.max_new_tokens))
+    eng.run(max_steps=2000)
+    return eng
+
+
+def _reqs(cfg, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, L).tolist(),
+                    max_new_tokens=o)
+            for i, (L, o) in enumerate([(17, 6), (23, 5), (12, 7)])]
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    kv_capacity=st.sampled_from([24, 30, 44]),
+    async_on=st.booleans(),
+    fail_rate=st.sampled_from([0.0, 0.3]),
+)
+def test_engine_sim_attribution_agree(small_llama, kv_capacity, async_on,
+                                      fail_rate):
+    """Identical knobs + requests -> identical schedules -> the engine's
+    ledger (debited in _apply_swaps / _issue_prefetch) and the sim's
+    (debited in the pricing loop) attribute identical bytes to every
+    schedule-determined cause on every step — including under deterministic
+    transfer chaos — and each conserves against its own aggregates."""
+    cfg, model, params = small_llama
+    plan = FaultPlan(seed=9, fail_rate=fail_rate) if fail_rate else None
+    reqs = _reqs(cfg)
+    eng = _engine_run(model, params, cfg, reqs,
+                      kv_capacity_tokens=kv_capacity, async_prefetch=async_on,
+                      fault_plan=plan, max_transfer_retries=2)
+    sim = simulate_service(
+        TPUV6E, cfg, workload=None, qps=1.0, mode="packed", chunk=16,
+        max_decode_batch=3, max_concurrent_prefills=2,
+        kv_capacity_tokens=kv_capacity, preemption="swap", kv_block_size=4,
+        async_prefetch=async_on, fault_plan=plan, max_transfer_retries=2,
+        requests=[Request(rid=r.rid, prompt=list(r.prompt),
+                          max_new_tokens=r.max_new_tokens) for r in reqs],
+    )
+    eng_led = eng.scheduler.ledger
+    assert eng_led.compare(sim.ledger) == []
+    assert eng_led.conservation_errors(eng.attribution_aggregates()) == []
+    # both ran the swap regime on the tight budgets (vacuous agreement is
+    # no agreement)
+    if kv_capacity < 44:
+        assert eng_led.totals()[SWAP_OUT] > 0
+
+
+def test_prefix_adoption_attribution_agrees(small_llama):
+    """Shared-prefix adoption: prefix_saved + prefetch_stage flow through
+    different code paths (radix fork vs swap restore) — engine and sim must
+    still attribute the schedule-determined causes identically."""
+    cfg, model, params = small_llama
+    sreqs = shared_prefix_requests(n=4, shared_len=24, unique_len=9,
+                                   max_new_tokens=4, jitter=2, seed=7,
+                                   vocab_size=cfg.vocab_size)
+    eng = _engine_run(model, params, cfg, sreqs,
+                      prefetch_buffer_bytes=1 << 20,
+                      enable_prefix_cache=True)
+    sim = simulate_service(
+        TPUV6E, cfg, workload=None, qps=1.0, mode="packed", chunk=16,
+        max_decode_batch=3, max_concurrent_prefills=2, kv_block_size=4,
+        enable_prefix_cache=True,
+        requests=[Request(rid=r.rid, prompt=list(r.prompt),
+                          max_new_tokens=r.max_new_tokens) for r in sreqs],
+    )
+    led = eng.scheduler.ledger
+    assert led.totals()["prefix_saved"] > 0, "no adoption happened"
+    assert led.compare(sim.ledger) == []
+    assert led.conservation_errors(eng.attribution_aggregates()) == []
+
+
+# ---------------------------------------------------------------------------
+# exported traces: checker passes, doctored traces fail
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_pair(small_llama, tmp_path_factory):
+    """One engine run + the knob-identical sim, both traced and exported."""
+    cfg, model, params = small_llama
+    tmp = tmp_path_factory.mktemp("attr_traces")
+    reqs = _reqs(cfg)
+    eng_tr = TraceRecorder("engine")
+    eng = _engine_run(model, params, cfg, reqs, tracer=eng_tr,
+                      kv_capacity_tokens=30, async_prefetch=True)
+    eng.scheduler.ledger.record_totals(eng_tr, eng.attribution_aggregates())
+    sim_tr = TraceRecorder("sim", manual_clock=True)
+    simulate_service(
+        TPUV6E, cfg, workload=None, qps=1.0, mode="packed", chunk=16,
+        max_decode_batch=3, max_concurrent_prefills=2,
+        kv_capacity_tokens=30, preemption="swap", kv_block_size=4,
+        async_prefetch=True, tracer=sim_tr,
+        requests=[Request(rid=r.rid, prompt=list(r.prompt),
+                          max_new_tokens=r.max_new_tokens) for r in reqs],
+    )
+    epath, spath = tmp / "engine.json", tmp / "sim.json"
+    export_chrome(eng_tr, str(epath))
+    export_chrome(sim_tr, str(spath))
+    return epath, spath
+
+
+def test_traces_pass_checker_and_compare(traced_pair):
+    epath, spath = traced_pair
+    r = run_checker(epath, "--compare", spath)
+    assert r.returncode == 0, r.stderr
+    assert "sched sequences identical" in r.stdout
+
+
+def _doctor(src: Path, dst: Path, mutate) -> None:
+    trace = json.loads(src.read_text())
+    mutate(trace["traceEvents"])
+    dst.write_text(json.dumps(trace))
+
+
+def test_doctored_step_debit_fails_checker(traced_pair, tmp_path):
+    """Inflate one step's attn_read without touching the totals event: the
+    conservation pass must flag it."""
+    epath, _ = traced_pair
+    bad = tmp_path / "doctored_step.json"
+
+    def mutate(events):
+        for e in events:
+            if e.get("cat") == "attribution" and e["name"] != "attr totals":
+                e["args"]["attn_read"] = e["args"].get("attn_read", 0.0) + 4096
+                return
+        raise AssertionError("no attribution step instant in trace")
+
+    _doctor(epath, bad, mutate)
+    r = run_checker(bad)
+    assert r.returncode == 1
+    assert "attribution conservation" in r.stderr
+
+
+def test_doctored_aggregate_fails_checker(traced_pair, tmp_path):
+    """Drift an agg_* counter on the totals event: attributed bytes no
+    longer equal counted bytes."""
+    epath, _ = traced_pair
+    bad = tmp_path / "doctored_agg.json"
+
+    def mutate(events):
+        for e in events:
+            if e.get("cat") == "attribution" and e["name"] == "attr totals":
+                e["args"]["agg_swapped_bytes"] = \
+                    float(e["args"]["agg_swapped_bytes"]) + 512.0
+                return
+        raise AssertionError("no totals instant in trace")
+
+    _doctor(epath, bad, mutate)
+    r = run_checker(bad)
+    assert r.returncode == 1
+    assert "agg_swapped_bytes" in r.stderr
+
+
+def test_truncated_trace_fails_checker(traced_pair, tmp_path):
+    """Attribution steps without the run-total instant: truncated trace."""
+    epath, _ = traced_pair
+    bad = tmp_path / "doctored_trunc.json"
+    _doctor(epath, bad, lambda evs: evs.remove(next(
+        e for e in evs if e.get("cat") == "attribution"
+        and e["name"] == "attr totals")))
+    r = run_checker(bad)
+    assert r.returncode == 1
+    assert "truncated" in r.stderr
+
+
+def test_divergent_attribution_fails_compare(traced_pair, tmp_path):
+    """Perturb one attribution instant's sched key in the sim trace (the
+    cause args stay intact, so conservation still holds): ONLY the
+    --compare pass must report the divergence."""
+    epath, spath = traced_pair
+    bad = tmp_path / "doctored_sched.json"
+
+    def mutate(events):
+        for e in events:
+            args = e.get("args", {})
+            if e.get("cat") == "attribution" and "sched" in args:
+                key = json.loads(args["sched"]) if isinstance(
+                    args["sched"], str) else list(args["sched"])
+                key[-1] = int(key[-1]) + 7
+                args["sched"] = json.dumps(key)
+                return
+        raise AssertionError("no attribution sched key in trace")
+
+    _doctor(spath, bad, mutate)
+    r = run_checker(epath, "--compare", bad)
+    assert r.returncode == 1
+    assert "sched-sequence divergence" in r.stderr

@@ -1,0 +1,182 @@
+"""Benchmark regression gate (tools/check_bench.py).
+
+The gate must FAIL on a doctored regression (a gate that cannot fail gates
+nothing), PASS on noise inside the tolerance band, skip machine-dependent
+wall-clock keys entirely, and treat deterministic counters as exact.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+CHECKER = REPO / "tools" / "check_bench.py"
+
+spec = importlib.util.spec_from_file_location("check_bench", CHECKER)
+check_bench = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_bench)
+
+
+BASELINE = {
+    "headline": {
+        "smoke": True,
+        "decode_speedup_vs_serial": 4.8,
+        "hbm_bytes_vs_packing_only": 0.82,
+        "roofline_bound_fracs": {"compute": 0.9, "hbm": 0.1},
+    },
+    "kernels": {
+        "smoke": True,
+        "paged_read": {"us_per_call": 120.0, "bytes_vs_dense": 0.25},
+    },
+    "overlap": {
+        "smoke": True,
+        "sim_wall_s_async": 0.12,
+        "sim_bytes_overlapped": 1048576,
+        "attn_tokens_touched": 4242,
+    },
+}
+
+
+def write(tmp_path: Path, name: str, obj) -> Path:
+    p = tmp_path / name
+    p.write_text(json.dumps(obj))
+    return p
+
+
+def run_gate(tmp_path: Path, current, baseline=BASELINE, trajectory=None):
+    argv = [str(write(tmp_path, "current.json", current)),
+            "--baseline", str(write(tmp_path, "baseline.json", baseline))]
+    if trajectory:
+        argv += ["--trajectory", str(trajectory)]
+    return check_bench.main(argv)
+
+
+def clone(delta=None):
+    cur = json.loads(json.dumps(BASELINE))
+    for path, value in (delta or {}).items():
+        node = cur
+        *parents, leaf = path.split(".")
+        for p in parents:
+            node = node[p]
+        node[leaf] = value
+    return cur
+
+
+def test_identical_passes(tmp_path, capsys):
+    assert run_gate(tmp_path, clone()) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_noise_within_tolerance_passes(tmp_path):
+    cur = clone({
+        "headline.decode_speedup_vs_serial": 4.8 * 0.97,   # -3% of 5% band
+        "headline.hbm_bytes_vs_packing_only": 0.82 * 1.04,  # +4% of 5% band
+        "kernels.paged_read.us_per_call": 999.0,            # wall clock: skip
+        "overlap.sim_wall_s_async": 7.0,                    # wall clock: skip
+        "headline.roofline_bound_fracs.compute": 0.5,       # explicit skip
+    })
+    assert run_gate(tmp_path, cur) == 0
+
+
+def test_speedup_regression_fails(tmp_path, capsys):
+    cur = clone({"headline.decode_speedup_vs_serial": 4.8 * 0.90})
+    assert run_gate(tmp_path, cur) == 1
+    assert "decode_speedup_vs_serial" in capsys.readouterr().err
+
+
+def test_byte_ratio_regression_fails(tmp_path, capsys):
+    cur = clone({"headline.hbm_bytes_vs_packing_only": 0.82 * 1.10})
+    assert run_gate(tmp_path, cur) == 1
+    assert "hbm_bytes_vs_packing_only" in capsys.readouterr().err
+
+
+def test_deterministic_counter_drift_fails(tmp_path, capsys):
+    """Schedule-determined counters gate exactly: one token of drift is a
+    schedule change, not noise."""
+    cur = clone({"overlap.attn_tokens_touched": 4243})
+    assert run_gate(tmp_path, cur) == 1
+    assert "schedule drift" in capsys.readouterr().err
+
+
+def test_missing_gated_key_fails(tmp_path, capsys):
+    cur = clone()
+    del cur["headline"]["decode_speedup_vs_serial"]
+    assert run_gate(tmp_path, cur) == 1
+    assert "missing" in capsys.readouterr().err
+
+
+def test_new_metric_is_ungated_note(tmp_path, capsys):
+    """A new benchmark section lands green; it only gates once committed to
+    the baseline."""
+    cur = clone()
+    cur["new_section"] = {"some_speedup_vs_serial_ratio_xyz": 1.0}
+    assert run_gate(tmp_path, cur) == 0
+    assert "new metric" in capsys.readouterr().out
+
+
+def test_smoke_flag_mismatch_warns(tmp_path, capsys):
+    cur = clone({"headline.smoke": False})
+    run_gate(tmp_path, cur)
+    assert "smoke flag" in capsys.readouterr().err
+
+
+def test_trajectory_appends_jsonl(tmp_path):
+    traj = tmp_path / "traj.jsonl"
+    assert run_gate(tmp_path, clone(), trajectory=traj) == 0
+    run_gate(tmp_path, clone({"overlap.attn_tokens_touched": 1}),
+             trajectory=traj)
+    lines = [json.loads(line) for line in traj.read_text().splitlines()]
+    assert len(lines) == 2
+    assert lines[0]["regressions"] == 0 and lines[1]["regressions"] == 1
+    assert lines[0]["gated"] > 0
+    # gated metrics only — wall-clock keys stay out of the history
+    assert all("us_per_call" not in k for k in lines[0]["metrics"])
+    assert "headline.decode_speedup_vs_serial" in lines[0]["metrics"]
+
+
+def test_unreadable_input_is_usage_error(tmp_path, capsys):
+    assert check_bench.main([str(tmp_path / "nope.json"), "--baseline",
+                             str(tmp_path / "also_nope.json")]) == 2
+
+
+def test_flatten_shapes():
+    flat = check_bench.flatten(
+        {"a": {"b": 1, "c": [2.5, {"d": 3}]}, "e": True, "f": "str"})
+    assert flat == {"a.b": 1.0, "a.c[0]": 2.5, "a.c[1].d": 3.0}
+
+
+@pytest.mark.parametrize("key,direction", [
+    ("headline.decode_speedup_vs_serial", "higher"),
+    ("headline.hbm_bytes_vs_packing_only", "lower"),
+    ("kernels.paged_read.bytes_vs_dense", "lower"),
+    ("kernels.paged_read.us_per_call", "skip"),
+    ("overlap.sim_wall_s_async", "skip"),
+    ("overlap.attn_tokens_touched", "equal"),
+    ("overlap.sim_bytes_overlapped", "equal"),
+    ("headline.roofline_bound_fracs.compute", "skip"),
+    ("something.brand_new", "info"),
+])
+def test_gate_table(key, direction):
+    assert check_bench.gate_for(key)[0] == direction
+
+
+def test_cli_subprocess_roundtrip(tmp_path):
+    """The committed-baseline workflow end to end via the real CLI."""
+    cur = write(tmp_path, "c.json", clone())
+    base = write(tmp_path, "b.json", BASELINE)
+    r = subprocess.run([sys.executable, str(CHECKER), str(cur),
+                        "--baseline", str(base)],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    bad = write(tmp_path, "bad.json",
+                clone({"headline.decode_speedup_vs_serial": 1.0}))
+    r = subprocess.run([sys.executable, str(CHECKER), str(bad),
+                        "--baseline", str(base)],
+                       capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "REGRESSION" in r.stderr

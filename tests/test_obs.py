@@ -352,6 +352,9 @@ def test_engine_and_sim_emit_identical_sched_sequences(tmp_path):
     for r in swap_requests():
         eng.submit(r)
     eng.run(max_steps=500)
+    # stamp the run-total attribution instant (as launch.serve and the
+    # benches do) so the exported trace carries its conservation anchor
+    eng.scheduler.ledger.record_totals(eng_tr, eng.attribution_aggregates())
 
     sim_tr = TraceRecorder("sim", manual_clock=True)
     simulate_service(

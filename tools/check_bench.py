@@ -1,0 +1,207 @@
+#!/usr/bin/env python3
+"""Benchmark regression gate: diff BENCH_kernels.json against a committed
+baseline with per-metric tolerances.
+
+    python tools/check_bench.py BENCH_kernels.json \
+        --baseline BENCH_baseline.json [--trajectory bench_trajectory.jsonl]
+
+Both files are flattened to dot-keys (lists indexed as ``[i]``) over their
+numeric leaves.  A curated gate table maps key patterns to a direction and
+tolerance:
+
+  * **lower-better ratios** (``bytes_vs_dense``, ``hbm_bytes_vs_packing_only``,
+    ...) fail when the current value exceeds baseline by more than the
+    tolerance;
+  * **higher-better figures** (``decode_speedup_vs_serial``, hit rates,
+    ``overlap_efficiency``) fail when the current value drops below baseline
+    by more than the tolerance;
+  * **equal** — schedule-determined byte/token counters must match the
+    baseline exactly (they are deterministic; any drift is a real change);
+  * **wall-clock timings** (``us_per_call``, ``*_s``, ``*_ms``, throughput
+    rates) are skipped: CI machines are not comparable and the baseline is
+    committed.
+
+Keys matching no gate are reported informationally, never gated — a new
+benchmark section lands green, then tightens once it's in the baseline.
+
+``--trajectory`` appends one JSON line (gated metrics + verdict) per run,
+so CI artifacts accumulate a machine-readable perf history.
+
+Updating the baseline after an intentional perf change::
+
+    PYTHONPATH=src python -m benchmarks.run --smoke \
+        --only kernels,prefix_cache,overlap,headline
+    cp BENCH_kernels.json BENCH_baseline.json   # commit it
+
+Exit status: 0 clean, 1 regression(s), 2 usage / unreadable input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# (key regex, direction, relative tolerance). First match wins. Directions:
+#   lower  — ratio/traffic metric, smaller is better
+#   higher — speedup/efficiency metric, bigger is better
+#   equal  — deterministic counter, must match exactly
+#   skip   — wall-clock / machine-dependent, never gated
+GATES: List[Tuple[str, str, float]] = [
+    # machine-dependent timings first so nothing below catches them
+    (r"(^|\.)us_per_call$", "skip", 0.0),
+    (r"(_|\.)(wall|serial|bound)_s(_|$)", "skip", 0.0),
+    (r"_(s|ms)$", "skip", 0.0),
+    (r"(gflops|mtok_per_s|tokens_per_s|per_s)", "skip", 0.0),
+    (r"dense_write_us$", "skip", 0.0),
+    (r"\.smoke$", "skip", 0.0),
+    (r"fault_seed$", "skip", 0.0),
+    # headline figures
+    (r"decode_speedup_vs_serial$", "higher", 0.05),
+    (r"overall_speedup_vs_serial$", "higher", 0.05),
+    (r"hbm_bytes_vs_packing_only$", "lower", 0.05),
+    # byte-traffic ratios: strictly-better-than-dense style figures
+    (r"bytes_vs_dense$", "lower", 0.02),
+    (r"prefill_bytes_vs_per_token$", "lower", 0.02),
+    # efficiency / hit-rate figures
+    (r"(overlap_efficiency|hit_rate)$", "higher", 0.02),
+    (r"roofline_bound_fracs\.", "skip", 0.0),
+    # deterministic schedule/byte/token counters: exact
+    (r"(tokens|bytes|count|steps|reads?|rows|failures|retries|aborted|"
+     r"recomputes|skipped|refetched|overlapped|moved|saved|touched|padded)"
+     r"(_[a-z_]+)?$", "equal", 0.0),
+]
+
+
+def flatten(obj, prefix: str = "", out: Optional[Dict[str, float]] = None
+            ) -> Dict[str, float]:
+    """Numeric leaves of a nested JSON value as dot-keyed floats (bools —
+    JSON's other scalar that compares numerically — are skipped)."""
+    if out is None:
+        out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            flatten(v, f"{prefix}.{k}" if prefix else str(k), out)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            flatten(v, f"{prefix}[{i}]", out)
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix] = float(obj)
+    return out
+
+
+def gate_for(key: str) -> Tuple[str, float]:
+    for pat, direction, tol in GATES:
+        if re.search(pat, key):
+            return direction, tol
+    return "info", 0.0
+
+
+def check(current: Dict[str, float], baseline: Dict[str, float]
+          ) -> Tuple[List[str], List[str], int]:
+    """Returns (regressions, notes, n_gated)."""
+    regressions: List[str] = []
+    notes: List[str] = []
+    n_gated = 0
+    for key in sorted(baseline):
+        direction, tol = gate_for(key)
+        if direction == "skip":
+            continue
+        if key not in current:
+            if direction == "info":
+                notes.append(f"{key}: in baseline but missing from current "
+                             "run (ungated)")
+            else:
+                regressions.append(f"{key}: present in baseline but missing "
+                                   "from current run")
+            continue
+        cur, base = current[key], baseline[key]
+        if direction == "info":
+            if cur != base:
+                notes.append(f"{key}: {base:g} -> {cur:g} (ungated)")
+            continue
+        n_gated += 1
+        if direction == "equal":
+            if cur != base:
+                regressions.append(
+                    f"{key}: deterministic counter changed {base:g} -> "
+                    f"{cur:g} (schedule drift?)")
+        elif direction == "lower":
+            limit = base * (1.0 + tol) + 1e-12
+            if cur > limit:
+                regressions.append(
+                    f"{key}: {cur:g} regressed above baseline {base:g} "
+                    f"(+{tol:.0%} tolerance)")
+        elif direction == "higher":
+            limit = base * (1.0 - tol) - 1e-12
+            if cur < limit:
+                regressions.append(
+                    f"{key}: {cur:g} regressed below baseline {base:g} "
+                    f"(-{tol:.0%} tolerance)")
+    for key in sorted(set(current) - set(baseline)):
+        if gate_for(key)[0] != "skip":
+            notes.append(f"{key}: new metric (not in baseline, ungated)")
+    return regressions, notes, n_gated
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="gate BENCH_kernels.json against a committed baseline")
+    ap.add_argument("current", help="BENCH_kernels.json from this run")
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_baseline.json to diff against")
+    ap.add_argument("--trajectory", default=None, metavar="JSONL",
+                    help="append this run's gated metrics as one JSON line")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.current) as f:
+            cur_raw = json.load(f)
+        with open(args.baseline) as f:
+            base_raw = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot load input: {e}", file=sys.stderr)
+        return 2
+
+    current, baseline = flatten(cur_raw), flatten(base_raw)
+    # a smoke-lane run vs a full-shapes baseline (or vice versa) compares
+    # different workloads — warn loudly but still gate: CI always pairs
+    # smoke with a smoke baseline, so a mismatch is a setup bug
+    for sec, rec in (cur_raw.items() if isinstance(cur_raw, dict) else []):
+        if isinstance(rec, dict) and "smoke" in rec:
+            bsec = base_raw.get(sec) if isinstance(base_raw, dict) else None
+            if isinstance(bsec, dict) and bsec.get("smoke") != rec["smoke"]:
+                print(f"check_bench: WARNING: section {sec!r} smoke flag "
+                      f"differs from baseline — lanes are not comparable",
+                      file=sys.stderr)
+
+    regressions, notes, n_gated = check(current, baseline)
+
+    if args.trajectory:
+        record = {
+            "current": args.current,
+            "baseline": args.baseline,
+            "gated": n_gated,
+            "regressions": len(regressions),
+            "metrics": {k: v for k, v in sorted(current.items())
+                        if gate_for(k)[0] in ("lower", "higher", "equal")},
+        }
+        with open(args.trajectory, "a") as f:
+            f.write(json.dumps(record) + "\n")
+
+    for n in notes:
+        print(f"check_bench: note: {n}")
+    if regressions:
+        for r in regressions:
+            print(f"check_bench: REGRESSION: {r}", file=sys.stderr)
+        print(f"check_bench: {len(regressions)} regression(s) vs "
+              f"{args.baseline}", file=sys.stderr)
+        return 1
+    print(f"check_bench: OK — {n_gated} gated metric(s) within tolerance "
+          f"of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,18 +12,24 @@ Checks, for README.md and every ``docs/*.md``:
 3. every backticked ``*.py`` / ``*.md`` path (``src/repro/...``, a
    repo-relative path, a ``src/repro``-relative shorthand like
    ``sim/service.py``, or a bare basename like ``tiers.py``) exists in the
-   tree. A ``::test_name`` suffix is stripped first.
+   tree. A ``::test_name`` suffix is stripped first;
+4. every backticked ``*.md`` reference inside a ``benchmarks/*.py`` module
+   docstring resolves the same way — a bench's methodology pointer (e.g.
+   ``benchmarks/roofline.py`` citing ``docs/benchmarks.md``) cannot cite a
+   file that does not exist.
 
 Usage:
 
     python tools/check_docs.py [--root DIR] [file.md ...]
 
-With no files, README.md + docs/*.md under the root are checked. Exits
-non-zero listing every broken reference.
+With no files, README.md + docs/*.md under the root are checked (the
+benchmark-docstring scan always runs). Exits non-zero listing every broken
+reference.
 """
 from __future__ import annotations
 
 import argparse
+import ast
 import re
 import sys
 from pathlib import Path
@@ -99,6 +105,32 @@ def check_file(md: Path, root: Path, tree_names) -> list:
     return errors
 
 
+def check_py_docstrings(root: Path, tree_names) -> list:
+    """Backticked ``*.md`` references in benchmarks/*.py module docstrings
+    must resolve — the stale-``EXPERIMENTS.md`` class of rot."""
+    errors = []
+    for py in sorted((root / "benchmarks").glob("*.py")):
+        try:
+            doc = ast.get_docstring(ast.parse(py.read_text()))
+        except SyntaxError as e:
+            errors.append(f"{py}: unparseable module ({e})")
+            continue
+        if not doc:
+            continue
+        for tick in TICK_RE.findall(doc):
+            cand = tick.split("::", 1)[0].strip()
+            if not cand.endswith(".md") or not PATH_RE.match(cand) \
+                    or cand.startswith("."):
+                continue
+            tries = [root / cand, root / "docs" / cand]
+            if any(t.exists() for t in tries):
+                continue
+            if "/" not in cand and cand in tree_names:
+                continue
+            errors.append(f"{py}: docstring cites missing doc -> `{tick}`")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("files", nargs="*", type=Path,
@@ -119,6 +151,8 @@ def main(argv=None) -> int:
     errors = []
     for md in files:
         errors.extend(check_file(md, root, tree_names))
+    if (root / "benchmarks").is_dir():
+        errors.extend(check_py_docstrings(root, tree_names))
     for e in errors:
         print(e, file=sys.stderr)
     print(f"check_docs: {len(files)} files, {len(errors)} broken references")

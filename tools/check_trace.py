@@ -25,6 +25,16 @@ the pipeline's structural invariants:
   * **requests** — every admitted request reaches a terminal event:
     ``finish`` (completed) or ``cancel`` (deadline expiry / shutdown, with
     its reason) — no request is silently dropped mid-flight;
+  * **attribution** — byte conservation on the ``attribution`` lane
+    (``repro.obs.attribution``): the per-step cause debits must sum to the
+    ``attr totals`` event's per-cause totals, and each independently
+    accumulated aggregate counter the totals event carries (``agg_*``) must
+    equal the sum of the causes that ``AGG_RULES`` maps it to — attributed
+    bytes equal counted bytes, per cause.  Because the per-step instants
+    carry canonical sched keys over the schedule-determined causes,
+    ``--compare`` additionally asserts the engine and the sim attributed
+    identical bytes on every step.  Traces predating the attribution lane
+    (no such events) skip this check;
   * **compare** (``--compare``) — the schedule-determined event sequences
     (the ``args.sched`` canonical keys) of two traces are identical: the
     engine and the simulator, driven by the same Scheduler over the same
@@ -42,6 +52,23 @@ from typing import Dict, List, Optional, Tuple
 
 QUEUE_LANE = "prefetch_queue"
 REQUEST_LANE = "request"
+ATTR_LANE = "attribution"
+ATTR_TOTALS = "attr totals"
+# mirror of repro.obs.attribution (this tool stays import-free so it runs
+# on any checkout without PYTHONPATH; tests/test_attribution.py asserts the
+# two copies agree)
+ATTR_CAUSES = ("attn_read", "kv_fill", "swap_out", "swap_in",
+               "prefetch_stage", "retry_refetch", "prefix_saved")
+ATTR_AGG_RULES = {
+    "swapped_bytes": ("swap_out", "swap_in"),
+    "hbm_bytes_moved": ("kv_fill", "swap_out", "swap_in"),
+    "prefetch_fill_bytes": ("prefetch_stage",),
+    "swap_out_bytes": ("swap_out",),
+    "swap_in_bytes": ("swap_in",),
+    "attn_read_bytes": ("attn_read",),
+    "prefix_saved_bytes": ("prefix_saved",),
+    "retry_refetch_bytes": ("retry_refetch",),
+}
 TERMINAL_STATES = ("consumed", "cancelled")
 # float-µs slack for shared span endpoints (a*c + b*c vs (a+b)*c ulp noise);
 # one nanosecond — far below any real span, far above double rounding
@@ -179,6 +206,67 @@ def check_request_terminal(events: List[dict], errs: List[str]) -> None:
                     "'finish' or 'cancel' event")
 
 
+def _bytes_close(a: float, b: float) -> bool:
+    return abs(a - b) <= max(1.0, 1e-6 * max(abs(a), abs(b)))
+
+
+def check_attribution(events: List[dict], errs: List[str]) -> None:
+    """Byte conservation on the attribution lane: per-step cause debits sum
+    to the run totals, and every aggregate counter the totals event carries
+    equals the causes ATTR_AGG_RULES maps it to."""
+    step_sums = {c: 0.0 for c in ATTR_CAUSES}
+    n_steps = 0
+    totals: Optional[dict] = None
+    for i, e in enumerate(events):
+        if e.get("ph") != "i" or e.get("cat") != ATTR_LANE:
+            continue
+        args = e.get("args", {})
+        if e["name"] == ATTR_TOTALS:
+            if totals is not None:
+                errs.append(f"event {i}: duplicate {ATTR_TOTALS!r} event")
+            totals = args
+            continue
+        n_steps += 1
+        for c in ATTR_CAUSES:
+            v = args.get(c)
+            if not isinstance(v, (int, float)):
+                errs.append(f"event {i} ({e['name']!r}): attribution instant "
+                            f"missing numeric cause {c!r}")
+            else:
+                step_sums[c] += float(v)
+    if totals is None:
+        if n_steps:
+            errs.append(f"{n_steps} attribution step event(s) but no "
+                        f"{ATTR_TOTALS!r} event — truncated trace?")
+        return  # no attribution lane at all: older trace, nothing to check
+    for c in ATTR_CAUSES:
+        want = totals.get(f"total_{c}")
+        if not isinstance(want, (int, float)):
+            errs.append(f"{ATTR_TOTALS!r} event missing numeric "
+                        f"'total_{c}'")
+        elif not _bytes_close(step_sums[c], float(want)):
+            errs.append(
+                f"attribution conservation: per-step {c!r} sums to "
+                f"{step_sums[c]:.1f} bytes but 'total_{c}' is "
+                f"{float(want):.1f}")
+    for k, v in totals.items():
+        if not k.startswith("agg_"):
+            continue
+        causes = ATTR_AGG_RULES.get(k[len("agg_"):])
+        if causes is None:
+            errs.append(f"{ATTR_TOTALS!r} event carries unknown aggregate "
+                        f"{k!r} — no ATTR_AGG_RULES entry to check it")
+            continue
+        got = sum(step_sums[c] for c in causes)
+        if not isinstance(v, (int, float)):
+            errs.append(f"{ATTR_TOTALS!r} event: non-numeric {k!r}")
+        elif not _bytes_close(got, float(v)):
+            errs.append(
+                f"attribution conservation: {'+'.join(causes)} = "
+                f"{got:.1f} bytes but aggregate {k!r} counted "
+                f"{float(v):.1f}")
+
+
 def sched_sequence(events: List[dict]) -> List[str]:
     return [e["args"]["sched"] for e in events
             if e.get("ph") == "i" and "sched" in e.get("args", {})]
@@ -203,6 +291,7 @@ def check_file(path: str, errs: List[str]) -> List[dict]:
     check_lane_overlap(events, errs)
     check_transfer_lifecycle(events, errs)
     check_request_terminal(events, errs)
+    check_attribution(events, errs)
     return events
 
 
